@@ -1,0 +1,38 @@
+"""Thm. 1/2/7/9: end-to-end decentralized-encoding costs, universal vs the
+RS-specific (Cauchy-like) method, across (K, R) and p."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import FERMAT, RoundNetwork, decentralized_encode
+from repro.core.cauchy import StructuredGRS
+
+ALPHA, BETA_BITS = 1e-5, 1e-9 * 17
+
+
+def rows() -> list[str]:
+    f = FERMAT
+    rng = np.random.default_rng(2)
+    out = []
+    for (K, R, p) in [(64, 16, 1), (256, 32, 1), (256, 64, 1), (512, 64, 1),
+                      (64, 16, 2), (16, 64, 1)]:
+        x = f.rand((K, 1), rng)
+        sgrs = StructuredGRS.build(f, K, R)
+        A = sgrs.grs.A_direct()
+        t0 = time.perf_counter()
+        _, net_u = decentralized_encode(f, A, x, p=p)
+        us_u = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        _, net_r = decentralized_encode(f, A, x, p=p, method="rs", sgrs=sgrs)
+        us_r = (time.perf_counter() - t0) * 1e6
+        cu, cr = net_u.cost(ALPHA, BETA_BITS), net_r.cost(ALPHA, BETA_BITS)
+        out.append(
+            f"framework/universal_K{K}_R{R}_p{p},{us_u:.1f},"
+            f"C1={net_u.C1};C2={net_u.C2};C={cu:.2e}")
+        out.append(
+            f"framework/rs_K{K}_R{R}_p{p},{us_r:.1f},"
+            f"C1={net_r.C1};C2={net_r.C2};C={cr:.2e};"
+            f"C2_gain_vs_universal={net_u.C2 - net_r.C2}")
+    return out

@@ -1,0 +1,48 @@
+"""Pallas gf_matmul kernel micro-bench (interpret mode on CPU — the numbers
+are correctness-path timings, the TPU perf model lives in the roofline)."""
+from __future__ import annotations
+
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.field import FERMAT_Q
+from repro.kernels.gf_matmul import gf_matmul
+from repro.kernels.ref import gf_matmul_ref
+
+
+def _time(fn, reps=3):
+    fn()  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn().block_until_ready()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows() -> list[str]:
+    rng = np.random.default_rng(3)
+    out = []
+    for (M, K, N) in [(128, 128, 128), (256, 256, 128)]:
+        a = jnp.asarray(rng.integers(0, FERMAT_Q, (M, K)).astype(np.uint32))
+        b = jnp.asarray(rng.integers(0, FERMAT_Q, (K, N)).astype(np.uint32))
+        us_k = _time(lambda: gf_matmul(a, b))
+        us_r = _time(lambda: gf_matmul_ref(a, b))
+        gf_ops = 2 * M * K * N
+        out.append(f"kernel/gf_matmul_{M}x{K}x{N},{us_k:.0f},"
+                   f"gf_ops={gf_ops};interp_mode=1;ref_us={us_r:.0f}")
+
+    from repro.kernels.ntt import ntt, ntt_ref
+
+    for K in (256, 1024):
+        W = 128
+        x = jnp.asarray(rng.integers(0, FERMAT_Q, (K, W)).astype(np.uint32))
+        us_n = _time(lambda: ntt(x))
+        # O(K log K * W) vs the O(K^2 * W) matmul encode
+        import math
+        ops_ntt = K * int(math.log2(K)) * W
+        ops_mm = K * K * W
+        out.append(f"kernel/ntt_{K}x{W},{us_n:.0f},"
+                   f"field_ops={ops_ntt};matmul_equiv_ops={ops_mm};"
+                   f"algorithmic_gain={ops_mm / ops_ntt:.1f}x")
+    return out

@@ -1,0 +1,39 @@
+"""Sec. II comparison vs Jeong et al. [21] multi-reduce and a centralized
+gather-encode-scatter strawman.  The paper claims multi-reduce spends
+(R - 2*sqrt(R) - 1) * beta*log2(q)*W more than the proposed framework."""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core import FERMAT, decentralized_encode
+from repro.core.cost_model import (
+    framework, gather_encode_scatter, multireduce_jeong, universal,
+)
+
+ALPHA, BETA_BITS = 1e-5, 1e-9 * 17
+
+
+def rows() -> list[str]:
+    f = FERMAT
+    rng = np.random.default_rng(1)
+    out = []
+    for (K, R) in [(16, 4), (64, 16), (256, 16), (1024, 64)]:
+        A = f.rand((K, R), rng)
+        x = f.rand((K, 1), rng)
+        t0 = time.perf_counter()
+        _, net = decentralized_encode(f, A, x, p=1)
+        us = (time.perf_counter() - t0) * 1e6
+        ours = net.cost(ALPHA, BETA_BITS)
+        mr = multireduce_jeong(K, R, 1)
+        gs = gather_encode_scatter(K, R, 1)
+        claim_gap = max(0.0, R - 2 * math.sqrt(R) - 1)
+        out.append(
+            f"multireduce/K{K}_R{R},{us:.1f},"
+            f"ours_C1={net.C1};ours_C2={net.C2};"
+            f"multireduce_C2={mr.C2};gather_scatter_C2={gs.C2};"
+            f"paper_claim_extra_C2={claim_gap:.1f};"
+            f"measured_extra_C2={mr.C2 - net.C2}")
+    return out

@@ -1,0 +1,67 @@
+"""Roofline table generator: reads results/dryrun/*.json (produced by
+`python -m repro.launch.dryrun`) and emits the §Roofline rows + a markdown
+table for EXPERIMENTS.md."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(out_dir: str = "results/dryrun") -> list[dict]:
+    cells = []
+    for p in sorted(Path(out_dir).glob("*.json")):
+        cells.append(json.loads(p.read_text()))
+    return cells
+
+
+def rows() -> list[str]:
+    out = []
+    for c in load():
+        name = f"roofline/{c['arch']}__{c['shape']}__{c['mesh']}"
+        if "error" in c:
+            out.append(f"{name},0,ERROR={c['error'][:60]}")
+            continue
+        if "skipped" in c:
+            out.append(f"{name},0,SKIP={c['skipped'][:60]}")
+            continue
+        r = c["roofline"]
+        out.append(
+            f"{name},{c['compile_s'] * 1e6:.0f},"
+            f"compute_s={r['compute_s']:.4f};memory_s={r['memory_s']:.4f};"
+            f"collective_s={r['collective_s']:.4f};dominant={r['dominant']};"
+            f"useful_ratio={c['useful_ratio']:.3f};"
+            f"roofline_frac={c['roofline_fraction']:.4f}")
+    return out
+
+
+def markdown_table(out_dir: str = "results/dryrun", mesh: str = "single") -> str:
+    cells = [c for c in load(out_dir) if c.get("mesh") == mesh]
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL/HLO flops | roofline frac | fits HBM (temp GB/dev) |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    key = lambda c: (c["arch"], SHAPE_ORDER.index(c["shape"]))
+    for c in sorted(cells, key=key):
+        if "skipped" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | — | — | — | skipped: "
+                         f"{c['skipped'][:40]} | — | — | — |")
+            continue
+        if "error" in c:
+            lines.append(f"| {c['arch']} | {c['shape']} | ERROR | | | "
+                         f"{c['error'][:60]} | | | |")
+            continue
+        r = c["roofline"]
+        tgb = (c["memory"]["temp_bytes"] or 0) / 1e9
+        lines.append(
+            f"| {c['arch']} | {c['shape']} | {r['compute_s']:.3f} | "
+            f"{r['memory_s']:.3f} | {r['collective_s']:.3f} | "
+            f"{r['dominant'].replace('_s','')} | {c['useful_ratio']:.2f} | "
+            f"{c['roofline_fraction']:.3f} | {tgb:.1f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

@@ -1,0 +1,52 @@
+"""Benchmark driver — one section per paper table/claim.
+
+Prints ``name,us_per_call,derived`` CSV.  Sections:
+  table1/*       — Table I: universal / DFT / Vandermonde A2A costs vs theory
+  multireduce/*  — Sec. II comparison vs Jeong et al. [21] + strawman
+  framework/*    — Thm. 1/2/7/9 end-to-end decentralized encoding costs
+  kernel/*       — Pallas gf_matmul micro-bench (interpret mode)
+  mesh_encode/*  — lowered-HLO collective bytes, universal vs RS (subprocess)
+  roofline/*     — dry-run roofline cells, if results/dryrun exists
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    from benchmarks import framework_costs, kernel_bench, multireduce_compare, table1_costs
+
+    for mod in (table1_costs, multireduce_compare, framework_costs, kernel_bench):
+        for row in mod.rows():
+            print(row, flush=True)
+
+    # mesh bench needs its own process (8 forced host devices)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
+    env.pop("XLA_FLAGS", None)
+    for script, prefix in [("mesh_encode_bench.py", "mesh_encode/"),
+                           ("mesh_a2a_scale.py", "mesh_a2a/")]:
+        proc = subprocess.run(
+            [sys.executable, str(Path(__file__).resolve().parent / script)],
+            capture_output=True, text=True, env=env, timeout=1200)
+        for line in proc.stdout.splitlines():
+            if line.startswith(prefix):
+                print(line, flush=True)
+        if proc.returncode != 0:
+            print(f"{prefix}FAILED,0,rc={proc.returncode}", flush=True)
+
+    from benchmarks import roofline
+
+    if Path("results/dryrun").exists():
+        for row in roofline.rows():
+            print(row, flush=True)
+
+
+if __name__ == "__main__":
+    main()

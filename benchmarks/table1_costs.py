@@ -1,0 +1,84 @@
+"""Table I of the paper: costs of the all-to-all encode schemes.
+
+Measured (simulator) vs analytic (theorems) C1/C2 for:
+  universal (prepare-and-shoot, Thm. 3)
+  specific DFT (Thm. 4 / Cor. 1)
+  specific Vandermonde (draw-and-loose, Thm. 5)
+plus the Lemma 1/2 lower bounds.  Emits CSV rows:
+  name,us_per_call,derived
+where derived packs "C1=..;C2=..;C=.." with the paper's cost
+C = alpha*C1 + beta*log2(q)*C2 at (alpha=1e-5 s, beta=1e-9 s/bit).
+"""
+from __future__ import annotations
+
+import math
+import time
+
+import numpy as np
+
+from repro.core import (
+    FERMAT, RoundNetwork, StructuredPoints, cost_dft, cost_draw_loose,
+    cost_universal, dft_a2a, draw_loose, universal_a2a,
+)
+from repro.core.cost_model import lower_bound_c1, lower_bound_c2
+
+ALPHA, BETA_BITS = 1e-5, 1e-9 * 17  # beta * ceil(log2 q)
+
+
+def _run(name, fn, reps=1):
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn()
+    us = (time.perf_counter() - t0) / reps * 1e6
+    return us, out
+
+
+def rows() -> list[str]:
+    f = FERMAT
+    rng = np.random.default_rng(0)
+    out = []
+    for K in (16, 64, 256, 1024):
+        for p in (1, 2):
+            x = f.rand(K, rng)
+            C = f.rand((K, K), rng)
+            net = RoundNetwork(K, p)
+            us, _ = _run(f"univ_K{K}", lambda: universal_a2a(f, C, x, p=p,
+                                                             net=RoundNetwork(K, p)))
+            c1t, c2t = cost_universal(K, p)
+            net = RoundNetwork(K, p)
+            universal_a2a(f, C, x, p=p, net=net)
+            cost = net.cost(ALPHA, BETA_BITS)
+            lb1, lb2 = lower_bound_c1(K, p), lower_bound_c2(K, p)
+            out.append(
+                f"table1/universal_K{K}_p{p},{us:.1f},"
+                f"C1={net.C1};C2={net.C2};C1_thm={c1t};C2_thm={c2t};"
+                f"C1_lb={lb1};C2_lb={lb2:.1f};C={cost:.2e}")
+            if K & (K - 1) == 0 and p == 1:
+                xs = {k: x[k] for k in range(K)}
+                res = {}
+                net = RoundNetwork(K, p)
+                us, _ = _run(f"dft_K{K}", lambda: RoundNetwork(K, p).run(
+                    dft_a2a(f, xs, list(range(K)), p, 2, {})))
+                net = RoundNetwork(K, p)
+                net.run(dft_a2a(f, xs, list(range(K)), p, 2, res))
+                c1t, c2t = cost_dft(K, 2, p)
+                out.append(
+                    f"table1/dft_K{K}_p{p},{us:.1f},"
+                    f"C1={net.C1};C2={net.C2};C1_thm={c1t};C2_thm={c2t};"
+                    f"C={net.cost(ALPHA, BETA_BITS):.2e}")
+            if p == 1:
+                sp = StructuredPoints.build(f, K, P=2)
+                res = {}
+                net = RoundNetwork(K, p)
+                us, _ = _run(f"vand_K{K}", lambda: RoundNetwork(K, p).run(
+                    draw_loose(f, sp, {k: x[k] for k in range(K)},
+                               list(range(K)), p, {})))
+                net.run(draw_loose(f, sp, {k: x[k] for k in range(K)},
+                                   list(range(K)), p, res))
+                c1t, c2t = cost_draw_loose(sp, p)
+                out.append(
+                    f"table1/vandermonde_K{K}_p{p},{us:.1f},"
+                    f"C1={net.C1};C2={net.C2};C1_thm={c1t};C2_thm={c2t};"
+                    f"gain_vs_univ_C2={cost_universal(K, p)[1] - net.C2};"
+                    f"C={net.cost(ALPHA, BETA_BITS):.2e}")
+    return out

@@ -1,0 +1,59 @@
+"""Fault-tolerance demo: train, kill 4 of 16 state shards mid-run, restore
+from Reed-Solomon parity (the paper's decentralized encoding output), and
+verify training continues bit-identically to an uninterrupted run."""
+import sys
+import tempfile
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import jax
+import numpy as np
+
+from repro.ckpt import CodedCheckpointer
+from repro.configs import get_config
+from repro.data import SyntheticLM
+from repro.train import init_state, make_train_setup, make_train_step
+
+
+def run(steps, ckpt=None, fail_at=None, fail_shards=frozenset()):
+    cfg = get_config("qwen3_1_7b").smoke()
+    opt, _ = make_train_setup(cfg, total_steps=steps, peak_lr=5e-3)
+    state = init_state(cfg, jax.random.PRNGKey(0), opt)
+    step = jax.jit(make_train_step(cfg, opt))
+    data = SyntheticLM(cfg.vocab, 64, 8)
+    losses = []
+    for i in range(steps):
+        state, m = step(state, data.device_batch(i))
+        losses.append(float(m["loss"]))
+        if ckpt and (i + 1) % 10 == 0:
+            ckpt.save(i + 1, jax.device_get(state))
+        if ckpt and fail_at == i:
+            print(f"  !! shards {sorted(fail_shards)} lost at step {i}; "
+                  f"reconstructing from RS parity...")
+            s = ckpt.latest_step()
+            state = ckpt.restore(s, state, failed_shards=fail_shards)
+            # rewind to the checkpoint step and replay (deterministic data)
+            return losses[:s] + run_from(state, step, data, s, steps)
+    return losses
+
+
+def run_from(state, step, data, start, steps):
+    losses = []
+    for i in range(start, steps):
+        state, m = step(state, data.device_batch(i))
+        losses.append(float(m["loss"]))
+    return losses
+
+
+if __name__ == "__main__":
+    with tempfile.TemporaryDirectory() as td:
+        print("baseline run (no failures)...")
+        base = run(30)
+        print("run with 4/16 shard failures at step 17...")
+        ck = CodedCheckpointer(td, n_shards=16, n_parity=4)
+        recov = run(30, ckpt=ck, fail_at=17, fail_shards={2, 5, 11, 14})
+        drift = max(abs(a - b) for a, b in zip(base, recov))
+        print(f"max loss drift vs uninterrupted run: {drift:.2e}")
+        assert drift < 1e-5, "coded restore must be exact"
+        print("OK: training recovered bit-identically from 4 lost shards")

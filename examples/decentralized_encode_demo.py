@@ -1,0 +1,35 @@
+"""The paper's own workload: decentralized encoding of a systematic
+Reed-Solomon code — universal vs specific scheduling, with the linear-model
+cost C = alpha*C1 + beta*log2(q)*C2 reported for both."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.core import FERMAT, decentralized_encode
+from repro.core.cauchy import StructuredGRS
+
+if __name__ == "__main__":
+    f = FERMAT
+    rng = np.random.default_rng(0)
+    K, R, W = 256, 64, 8  # 256 sources, 64 parity sinks, 8-symbol payloads
+    print(f"decentralized encoding: K={K} sources, R={R} sinks, W={W}, "
+          f"F_{f.q}")
+    sgrs = StructuredGRS.build(f, K, R)
+    A = sgrs.grs.A_direct()
+    x = f.rand((K, W), rng)
+
+    y_u, net_u = decentralized_encode(f, A, x, p=1)
+    y_r, net_r = decentralized_encode(f, A, x, p=1, method="rs", sgrs=sgrs)
+    assert np.array_equal(y_u, y_r) and np.array_equal(y_u, f.matmul(A.T, x))
+
+    alpha, beta_bits = 1e-5, 17e-9
+    for name, net in [("universal (prepare-and-shoot)", net_u),
+                      ("RS-specific (2x draw-and-loose)", net_r)]:
+        print(f"  {name:32s} C1={net.C1:3d} rounds  C2={net.C2:4d} elems  "
+              f"C={net.cost(alpha, beta_bits) * 1e6:.1f} us (model)")
+    print(f"  C2 reduction from the paper's specific algorithm: "
+          f"{net_u.C2 - net_r.C2} field elements "
+          f"({100 * (1 - net_r.C2 / net_u.C2):.0f}%)")

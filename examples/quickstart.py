@@ -1,0 +1,26 @@
+"""Quickstart: train a small LM end-to-end with coded checkpointing.
+
+    PYTHONPATH=src python examples/quickstart.py            # ~2 min on CPU
+    PYTHONPATH=src python examples/quickstart.py --hundred-m # ~100M params
+
+Drives the same launcher used in production (repro.launch.train); the only
+difference on a TPU pod is --production (16x16 mesh shardings).
+"""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+if __name__ == "__main__":
+    hundred_m = "--hundred-m" in sys.argv
+    argv = ["quickstart", "--arch", "qwen3_1_7b", "--steps", "60",
+            "--peak-lr", "5e-3", "--batch", "8", "--seq-len", "128",
+            "--ckpt-dir", "/tmp/repro_quickstart_ckpt", "--ckpt-every", "30",
+            "--ckpt-shards", "8", "--ckpt-parity", "2"]
+    if hundred_m:
+        # ~100M params: widen the reduced config (trains for real; slower)
+        argv += ["--d-model", "512", "--n-layers", "8", "--steps", "200"]
+    sys.argv = argv
+    from repro.launch.train import main
+
+    main()

@@ -1,0 +1,12 @@
+"""Batched greedy serving demo (prefill + KV-cached decode)."""
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+if __name__ == "__main__":
+    sys.argv = ["serve_demo", "--arch", "mamba2_780m", "--batch", "4",
+                "--prompt-len", "12", "--gen-len", "24"]
+    from repro.launch.serve import main
+
+    main()

@@ -1,0 +1,3 @@
+from .checkpoint import CodedCheckpointer, tree_to_bytes, bytes_to_tree
+
+__all__ = ["CodedCheckpointer", "tree_to_bytes", "bytes_to_tree"]

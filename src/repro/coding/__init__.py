@@ -1,0 +1,4 @@
+from .gradient_code import GradientCoder, coded_gradient
+from .lagrange_compute import LagrangeComputer
+
+__all__ = ["GradientCoder", "coded_gradient", "LagrangeComputer"]

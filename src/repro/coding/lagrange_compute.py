@@ -1,0 +1,69 @@
+"""Lagrange coded computing (Remark 9 / Yu et al. [9]) over F_65537.
+
+Masterless LCC: K data shards x_0..x_{K-1} in F_q^W are interpolated into a
+polynomial g with g(alpha_k) = x_k; each of N workers holds the coded shard
+x~_n = g(beta_n) — produced decentralized via the paper's Cauchy-like
+all-to-all encode (the Lagrange matrix V_alpha^-1 V_beta, Remark 9).
+Workers apply a polynomial f of degree d elementwise; the results
+f(g(beta_n)) are evaluations of h = f o g (degree d*(K-1)), so ANY
+d*(K-1)+1 worker results reconstruct every f(x_k) — stragglers and even
+Byzantine-silent workers are tolerated by construction.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core.field import Field
+from ..core.matrices import lagrange_matrix
+
+
+@dataclass(frozen=True)
+class LagrangeComputer:
+    field: Field
+    alphas: np.ndarray  # (K,)
+    betas: np.ndarray   # (N,)
+
+    @property
+    def K(self):
+        return self.alphas.size
+
+    @property
+    def N(self):
+        return self.betas.size
+
+    @staticmethod
+    def build(field: Field, K: int, N: int) -> "LagrangeComputer":
+        pts = np.arange(1, K + N + 1, dtype=np.int64)
+        return LagrangeComputer(field, pts[:K], pts[K:])
+
+    def encode(self, x: np.ndarray) -> np.ndarray:
+        """x: (K, W) -> coded (N, W) = L^T x, L = V_alpha^-1 V_beta."""
+        L = lagrange_matrix(self.field, self.alphas, self.betas)
+        return self.field.matmul(L.T, x)
+
+    def recovery_threshold(self, deg: int) -> int:
+        return deg * (self.K - 1) + 1
+
+    def decode(self, deg: int, worker_ids: np.ndarray, results: np.ndarray) -> np.ndarray:
+        """Interpolate h from >= deg*(K-1)+1 worker results, return f(x_k)."""
+        f = self.field
+        T = self.recovery_threshold(deg)
+        assert worker_ids.size >= T, "not enough workers returned"
+        pts = self.betas[worker_ids[:T]]
+        vals = f.arr(results[:T])
+        # Lagrange interpolation of h at the alphas
+        out = np.zeros((self.K,) + vals.shape[1:], np.int64)
+        for j, a in enumerate(self.alphas):
+            acc = np.zeros(vals.shape[1:], np.int64)
+            for i in range(T):
+                num, den = np.int64(1), np.int64(1)
+                for t in range(T):
+                    if t == i:
+                        continue
+                    num = f.mul(num, f.sub(a, pts[t]))
+                    den = f.mul(den, f.sub(pts[i], pts[t]))
+                acc = f.add(acc, f.mul(vals[i], f.mul(num, f.inv(den))))
+            out[j] = acc
+        return out

@@ -1,0 +1,41 @@
+"""Core reproduction of *On the Encoding Process in Decentralized Systems*.
+
+Public API:
+    Field, FERMAT               — finite fields (field.py)
+    RoundNetwork, Msg           — the paper's communication model (simulator.py)
+    prepare_shoot, universal_a2a — Sec. IV universal algorithm
+    dft_a2a                     — Sec. V-A permuted-DFT algorithm
+    draw_loose, StructuredPoints — Sec. V-B Vandermonde algorithm
+    StructuredGRS, cauchy_a2a   — Sec. VI systematic RS / Lagrange
+    decentralized_encode        — Sec. III framework
+    nonsystematic_encode        — Appendix B
+    cost_model                  — Table I analytic costs + baselines
+"""
+from .field import FERMAT, FERMAT_Q, Field
+from .simulator import Msg, RoundNetwork, run_lockstep
+from .prepare_shoot import cost_universal, prepare_shoot, universal_a2a
+from .dft_a2a import cost_dft, dft_a2a
+from .draw_loose import cost_draw_loose, draw_loose
+from .matrices import (
+    StructuredPoints,
+    SystematicGRS,
+    dft_matrix,
+    gauss_inverse,
+    lagrange_matrix,
+    permuted_dft_matrix,
+    vandermonde,
+)
+from .cauchy import StructuredGRS as StructuredGRSCode
+from .cauchy import cauchy_a2a, cost_cauchy, lagrange_a2a
+from .framework import decentralized_encode, nonsystematic_encode
+from . import cost_model
+
+__all__ = [
+    "FERMAT", "FERMAT_Q", "Field", "Msg", "RoundNetwork", "run_lockstep",
+    "prepare_shoot", "universal_a2a", "cost_universal",
+    "dft_a2a", "cost_dft", "draw_loose", "cost_draw_loose",
+    "StructuredPoints", "SystematicGRS", "StructuredGRSCode",
+    "dft_matrix", "permuted_dft_matrix", "vandermonde", "gauss_inverse",
+    "lagrange_matrix", "cauchy_a2a", "cost_cauchy", "lagrange_a2a",
+    "decentralized_encode", "nonsystematic_encode", "cost_model",
+]

@@ -1,0 +1,319 @@
+"""Mesh execution of the paper's schedules: devices as processors.
+
+Each device along one mesh axis plays one of the paper's processors; each
+communication round becomes one `jax.lax.ppermute` (the p-port model maps to
+p concurrent ICI links; we emit p ppermutes per round which XLA can overlap).
+All payloads are uint32 field elements (F_65537) and all per-device
+coefficients are *sharded table inputs* — the schedule itself is
+data-independent (Remark 1), so tables are precomputed host-side with the
+exact same numpy code paths that the simulator validates.
+
+Functions named `mesh_*` are shard_map *bodies*; `build_*_tables` are their
+host-side companions.  `coded_*` wrappers in `repro.coding` wire them into
+jitted train/checkpoint steps.
+
+Slot layout (prepare phase): Bruck-style contiguous growth — slot l holds
+x_{k - idx(l)} where idx maps digit-string l (base p+1, LSD first) to the
+paper's offset sum_s b_s (p+1)^(T_p - s).  This keeps every round's message a
+*static contiguous slice*, so lowered collective bytes match the paper's C2
+accounting (up to the power-of-(p+1) padding of the shoot slots, documented
+below).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .field import FERMAT_Q, fermat_add, fermat_mul, fermat_sub
+from .matrices import StructuredPoints, gauss_inverse, vandermonde
+from .prepare_shoot import phase_split
+from ..kernels.ref import gf_matmul_ref
+
+
+# ---------------------------------------------------------------------------
+# grouped ppermute helper
+# ---------------------------------------------------------------------------
+
+def _group_perm(N: int, stride: int, size: int, shift: int) -> list[tuple[int, int]]:
+    """Cyclic shift by `shift` within groups of `size` members spaced
+    `stride` apart (group of device k: same k % stride ... k // (stride*size)).
+
+    Covers columns (stride=Z), rows (stride=1) and the full axis
+    (stride=1, size=N).
+    """
+    perm = []
+    for k in range(N):
+        base = (k // (stride * size)) * (stride * size) + (k % stride)
+        pos = (k % (stride * size)) // stride
+        dst = base + ((pos + shift) % size) * stride
+        perm.append((k, dst))
+    return perm
+
+
+def _ppermute(x, axis_name, perm):
+    return jax.lax.ppermute(x, axis_name, perm)
+
+
+# ---------------------------------------------------------------------------
+# universal prepare-and-shoot on a mesh axis (or sub-groups of it)
+# ---------------------------------------------------------------------------
+
+def _slot_index_map(p: int, T_p: int) -> list[int]:
+    """idx(l): slot l (digits LSD-first base p+1) -> paper offset delta."""
+    m = (p + 1) ** T_p
+    idx = []
+    for l in range(m):
+        digs = []
+        ll = l
+        for _ in range(T_p):
+            digs.append(ll % (p + 1))
+            ll //= p + 1
+        # digit b_s (s = 1..T_p) contributes b_s * (p+1)^(T_p - s)
+        delta = sum(b * (p + 1) ** (T_p - s - 1) for s, b in enumerate(digs))
+        idx.append(delta)
+    return idx
+
+
+@dataclass(frozen=True)
+class UniversalTables:
+    """Per-device constants for mesh prepare-and-shoot of one matrix set."""
+
+    K: int          # group size (paper's K)
+    p: int
+    T_p: int
+    T_s: int
+    m: int
+    n: int          # ceil(K/m)
+    n_pad: int      # (p+1)^T_s slot padding
+    coef: np.ndarray  # (N, n_pad, m) uint32 — shoot-packet init coefficients
+    corr: np.ndarray  # (N, m) uint32 — eq. (4) overlap correction
+    group_stride: int
+    group_size: int
+
+
+def build_universal_tables(
+    field, mats: list[np.ndarray], N: int, p: int, group_stride: int = 1
+) -> UniversalTables:
+    """Tables for parallel prepare-and-shoot instances on groups of size K.
+
+    `mats[g]` is the K x K matrix of group g; groups partition the N devices
+    with members spaced `group_stride` apart (see _group_perm). Requires
+    m <= K (true whenever K >= p+1 ... asserted).
+    """
+    K = mats[0].shape[0]
+    n_groups = N // K
+    assert len(mats) == n_groups
+    L, T_p, T_s, m = phase_split(K, p)
+    assert m <= K, f"tiny-group corner (m={m} > K={K}) unsupported on mesh"
+    n = math.ceil(K / m)
+    n_pad = (p + 1) ** T_s
+    idx = _slot_index_map(p, T_p)
+    coef = np.zeros((N, n_pad, m), np.uint32)
+    corr = np.zeros((N, m), np.uint32)
+    for dev in range(N):
+        pos = (dev % (group_stride * K)) // group_stride  # local index k
+        # group id: enumerate groups in the same order as mats
+        g = (dev // (group_stride * K)) * group_stride + (dev % group_stride)
+        C = np.asarray(mats[g], np.int64) % field.q
+        k = pos
+        for l_t in range(n):
+            s = (k + l_t * m) % K
+            for l in range(m):
+                coef[dev, l_t, l] = C[(k - idx[l]) % K, s]
+        # eq. (4): offsets delta in [0, m*n - K) duplicated once
+        dup = m * n - K
+        for l in range(m):
+            if idx[l] < dup:
+                corr[dev, l] = C[(k - idx[l]) % K, k]
+    return UniversalTables(K, p, T_p, T_s, m, n, n_pad, coef, corr,
+                           group_stride, K)
+
+
+def mesh_universal_a2a(x, coef, corr, tables: UniversalTables, axis_name: str):
+    """shard_map body: x (W,) uint32 per device -> encoded (W,) per device.
+
+    coef (n_pad, m) / corr (m,) are this device's sharded table rows.
+    """
+    K, p, T_p, T_s, m = tables.K, tables.p, tables.T_p, tables.T_s, tables.m
+    N = tables.coef.shape[0]
+    W = x.shape[-1] if x.ndim else 1
+    x = x.reshape(1, -1).astype(jnp.uint32)
+
+    # ---- prepare: Bruck-contiguous growth --------------------------------
+    buf = jnp.zeros((m, x.shape[-1]), jnp.uint32).at[0].set(x[0])
+    size = 1
+    for t in range(1, T_p + 1):
+        stride = (p + 1) ** (T_p - t)
+        pieces = [buf[:size]]
+        for rho in range(1, p + 1):
+            perm = _group_perm(N, tables.group_stride, K, rho * stride)
+            pieces.append(_ppermute(buf[:size], axis_name, perm))
+        size *= p + 1
+        buf = jnp.concatenate(pieces + [buf[size:]], axis=0) if size < m else jnp.concatenate(pieces, axis=0)
+        buf = buf[:m]
+
+    # ---- local encode (the gf_matmul hot-spot) ----------------------------
+    w = gf_matmul_ref(coef.astype(jnp.uint32), buf)  # (n_pad, W)
+
+    # ---- shoot: (p+1)-nomial reduce of the w slots ------------------------
+    for t in range(1, T_s + 1):
+        blk = (p + 1) ** t
+        sub = (p + 1) ** (t - 1)
+        w_r = w.reshape(tables.n_pad // blk, blk, -1)
+        acc = w_r[:, 0]
+        for rho in range(1, p + 1):
+            sel = w_r[:, rho * sub]  # slots this device must send
+            perm = _group_perm(N, tables.group_stride, K, rho * sub * m)
+            recv = _ppermute(sel, axis_name, perm)
+            acc = fermat_add(acc, recv)
+        # survivor slots are ltarget multiples of blk: repack contiguously
+        keep = jnp.zeros((tables.n_pad // blk, blk, w.shape[-1]), jnp.uint32)
+        keep = keep.at[:, 0].set(acc)
+        # retain not-yet-consumed lower-digit slots for later rounds
+        for r_keep in range(1, blk):
+            if r_keep % sub == 0 and r_keep // sub in range(1, p + 1):
+                continue  # consumed this round
+            keep = keep.at[:, r_keep].set(w_r[:, r_keep])
+        w = keep.reshape(tables.n_pad, -1)
+
+    y = w[0]
+    # ---- eq. (4) overlap correction ---------------------------------------
+    dup_term = gf_matmul_ref(corr.astype(jnp.uint32)[None, :], buf)[0]
+    return fermat_sub(y, dup_term)
+
+
+# ---------------------------------------------------------------------------
+# radix-2 DFT stages on a mesh axis (Sec. V-A, P = 2)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DFTTables:
+    Z: int          # group size = 2^H
+    H: int
+    ca: np.ndarray  # (H, N) uint32: own coefficient per stage
+    cb: np.ndarray  # (H, N) uint32: partner coefficient per stage
+    group_stride: int
+
+
+def build_dft_tables(
+    field, N: int, Z: int, group_stride: int = 1, inverse: bool = False
+) -> DFTTables:
+    """Radix-2 permuted-DFT stage coefficients for groups of size Z."""
+    from .dft_a2a import _stage_matrix
+
+    H = int(round(math.log2(Z)))
+    assert 2**H == Z and (field.q - 1) % Z == 0
+    ca = np.zeros((H, N), np.uint32)
+    cb = np.zeros((H, N), np.uint32)
+    stages = range(H)
+    for h in stages:
+        pos = 2 ** (H - h - 1)
+        for dev in range(N):
+            j = (dev % (group_stride * Z)) // group_stride  # index in group
+            member0 = j & ~pos  # group member with bit cleared
+            mat = _stage_matrix(field, Z, 2, H, h, member0)
+            if inverse:
+                mat = gauss_inverse(field, mat)
+            d = (j >> int(math.log2(pos))) & 1
+            ca[h, dev] = mat[d, d]
+            cb[h, dev] = mat[1 - d, d]
+    if inverse:
+        ca = ca[::-1].copy()
+        cb = cb[::-1].copy()
+    return DFTTables(Z, H, ca, cb, group_stride)
+
+
+def mesh_dft(x, ca, cb, tables: DFTTables, axis_name: str, inverse: bool = False):
+    """shard_map body: per-device (W,) -> (W,). ca/cb are (H,) table rows.
+
+    Stage order is baked into the tables (build with inverse=True for the
+    inverse transform). Each stage: one pairwise exchange + butterfly.
+    """
+    N = tables.ca.shape[1]
+    Z, H = tables.Z, tables.H
+    v = x.astype(jnp.uint32)
+    for h in range(H):
+        pos = 2 ** (H - h - 1) if not inverse else 2 ** h
+        perm = []
+        for k in range(N):
+            j = (k % (tables.group_stride * Z)) // tables.group_stride
+            jp = j ^ pos
+            dst = k + (jp - j) * tables.group_stride
+            perm.append((k, dst))
+        recv = _ppermute(v, axis_name, perm)
+        v = fermat_add(fermat_mul(ca[h], v), fermat_mul(cb[h], recv))
+    return v
+
+
+# ---------------------------------------------------------------------------
+# draw-and-loose on a mesh axis (Sec. V-B)
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class DrawLooseTables:
+    sp: StructuredPoints
+    univ: UniversalTables | None  # draw phase (columns, size M), None if M=1
+    dft: DFTTables | None         # loose phase (rows, size Z), None if Z=1
+    scale: np.ndarray             # (N,) uint32 alpha_i^j (or inverse)
+    inverse: bool
+
+
+def build_draw_loose_tables(
+    field, sp: StructuredPoints, N_devices: int, p: int, inverse: bool = False
+) -> DrawLooseTables:
+    M, Z = sp.M, sp.Z
+    K = M * Z
+    n_rep = N_devices // K  # multiple independent grids along the axis
+    univ = None
+    if M > 1:
+        vm = _v_m_matrix(field, sp)
+        if inverse:
+            vm = gauss_inverse(field, vm)
+        univ = build_universal_tables(field, [vm] * (Z * n_rep), N_devices, p,
+                                      group_stride=Z)
+    dft = None
+    if Z > 1:
+        dft = build_dft_tables(field, N_devices, Z, group_stride=1,
+                               inverse=inverse)
+    scale = np.zeros(N_devices, np.uint32)
+    for dev in range(N_devices):
+        k = dev % K
+        i, j = k // Z, k % Z
+        s = pow(sp.alpha(i), j, field.q)
+        if inverse:
+            s = pow(s, field.q - 2, field.q)
+        scale[dev] = s
+    return DrawLooseTables(sp, univ, dft, scale, inverse)
+
+
+def _v_m_matrix(field, sp: StructuredPoints) -> np.ndarray:
+    alphas_z = np.array([pow(sp.alpha(i), sp.Z, field.q) for i in range(sp.M)],
+                        np.int64)
+    return vandermonde(field, alphas_z)
+
+
+def mesh_draw_loose(x, t: DrawLooseTables, table_rows: dict, axis_name: str):
+    """shard_map body. table_rows carries this device's sharded rows:
+    {'coef','corr','ca','cb','scale'} as applicable."""
+    v = x.astype(jnp.uint32)
+    if not t.inverse:
+        if t.univ is not None:
+            v = mesh_universal_a2a(v, table_rows["coef"], table_rows["corr"],
+                                   t.univ, axis_name)
+        v = fermat_mul(table_rows["scale"], v)
+        if t.dft is not None:
+            v = mesh_dft(v, table_rows["ca"], table_rows["cb"], t.dft,
+                         axis_name, inverse=False)
+    else:
+        if t.dft is not None:
+            v = mesh_dft(v, table_rows["ca"], table_rows["cb"], t.dft,
+                         axis_name, inverse=True)
+        v = fermat_mul(table_rows["scale"], v)
+        if t.univ is not None:
+            v = mesh_universal_a2a(v, table_rows["coef"], table_rows["corr"],
+                                   t.univ, axis_name)
+    return v

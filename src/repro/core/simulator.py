@@ -1,0 +1,108 @@
+"""Round-based p-port network simulator (the paper's communication model).
+
+The network is fully connected; time advances in rounds; in one round every
+processor may send one message and receive one message per port (p ports).
+Round t costs  alpha + beta * m_t  where m_t is the largest message (in field
+elements) exchanged in that round.  Metrics (Sec. I):
+
+    C1 = number of rounds
+    C2 = sum_t m_t
+
+Algorithms are written as *schedules*: python generators that yield, once per
+round, a list of `Msg(src, dst, n_elems)` records (state changes are applied
+by the generator itself — it simulates all processors of its group with
+global knowledge, which is legitimate because scheduling and coding schemes
+are data-independent, Remark 1).  The network runner:
+
+  * advances any number of schedules in lockstep (parallel instances on
+    disjoint processor groups, e.g. the M column-wise A2As of Sec. III),
+  * validates the p-port constraint globally per round,
+  * accounts C1 / C2 / total element traffic.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field as dc_field
+
+
+@dataclass(frozen=True)
+class Msg:
+    src: int
+    dst: int
+    n_elems: int  # field elements in this message
+
+    def __post_init__(self):
+        assert self.src != self.dst, "self-messages are local ops, not traffic"
+        assert self.n_elems >= 1
+
+
+@dataclass
+class RoundNetwork:
+    """Validates port constraints and accumulates C1/C2 across schedules."""
+
+    n_procs: int
+    p: int = 1
+    C1: int = 0
+    C2: int = 0
+    total_elems: int = 0
+    round_log: list = dc_field(default_factory=list)
+
+    def _account(self, msgs: list[Msg]) -> None:
+        sends: dict[int, int] = {}
+        recvs: dict[int, int] = {}
+        for m in msgs:
+            assert 0 <= m.src < self.n_procs and 0 <= m.dst < self.n_procs
+            sends[m.src] = sends.get(m.src, 0) + 1
+            recvs[m.dst] = recvs.get(m.dst, 0) + 1
+        over_s = {k: v for k, v in sends.items() if v > self.p}
+        over_r = {k: v for k, v in recvs.items() if v > self.p}
+        assert not over_s, f"port violation (send): {over_s} with p={self.p}"
+        assert not over_r, f"port violation (recv): {over_r} with p={self.p}"
+        m_t = max((m.n_elems for m in msgs), default=0)
+        self.C1 += 1
+        self.C2 += m_t
+        self.total_elems += sum(m.n_elems for m in msgs)
+        self.round_log.append((len(msgs), m_t))
+
+    def run(self, *schedules) -> None:
+        """Advance all schedules in lockstep until all are exhausted.
+
+        A schedule that finishes early simply idles (its processors wait,
+        Sec. III-B). Rounds where *no* schedule sends anything are free.
+        """
+        gens = [iter(s) for s in schedules]
+        while gens:
+            round_msgs: list[Msg] = []
+            alive = []
+            for g in gens:
+                try:
+                    round_msgs.extend(next(g))
+                    alive.append(g)
+                except StopIteration:
+                    pass
+            gens = alive
+            if round_msgs:
+                self._account(round_msgs)
+            elif gens:
+                # a schedule yielded an empty round (local-compute round):
+                # does not consume network time in the linear cost model
+                continue
+
+    def cost(self, alpha: float, beta_bits: float) -> float:
+        """C = alpha*C1 + (beta*ceil(log2 q))*C2 with beta_bits = beta*log2q."""
+        return alpha * self.C1 + beta_bits * self.C2
+
+
+def run_lockstep(*gens):
+    """Merge several round-schedules into one (their rounds align 1:1).
+
+    Used for nested parallelism: e.g. each DFT stage runs K/P parallel P-sized
+    prepare-and-shoot instances; the stage is itself one schedule.
+    """
+    iters = [iter(g) for g in gens]
+    for rounds in itertools.zip_longest(*iters, fillvalue=None):
+        merged: list[Msg] = []
+        for r in rounds:
+            if r:
+                merged.extend(r)
+        yield merged

@@ -1,0 +1,5 @@
+from .gf_matmul import gf_matmul
+from .ref import gf_matmul_ref
+from . import ops
+
+__all__ = ["gf_matmul", "gf_matmul_ref", "ops"]

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: batched radix-2 NTT over F_65537 (the paper's DFT
+layer, Sec. V-A, as an on-chip kernel).
+
+Computes, for each of W independent columns, the K-point NTT in
+decimation-in-frequency order — the output at position k is X[rev(k)],
+which is exactly the paper's *permuted* DFT matrix D_K·Pi (the algorithm of
+Sec. V-A produces the same permutation; validated in tests against
+`permuted_dft_matrix`).  Used as the local fast-encode path: a W-symbol
+payload column is one lane, so a (K, W) tile is transformed in
+O(K log K · W) field ops instead of the O(K^2 · W) matmul.
+
+VMEM layout: one (K, bw) tile resident across all log2(K) stages
+(K <= 4096, bw = 128 -> 2 MiB uint32); twiddles (H, K/2) ride along.
+All arithmetic is the uint32 Fermat-prime path — no 64-bit, TPU-native.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental import pallas as pl
+
+from repro.core.field import FERMAT, FERMAT_Q
+from .gf_matmul import _fermat_add_u32, _fermat_mul_u32
+
+
+def ntt_twiddles(K: int, inverse: bool = False) -> np.ndarray:
+    """(H, K/2) twiddle table for DIF stage h: w_h[j] = root^(j * 2^h)."""
+    H = int(math.log2(K))
+    assert 2**H == K and (FERMAT_Q - 1) % K == 0
+    root = FERMAT.root_of_unity(K)
+    if inverse:
+        root = pow(root, FERMAT_Q - 2, FERMAT_Q)
+    tw = np.zeros((H, K // 2), np.uint32)
+    for h in range(H):
+        stride = 2**h
+        for j in range(K // 2):
+            tw[h, j] = pow(root, (j % (K // (2 * stride))) * stride, FERMAT_Q)
+    return tw
+
+
+def _fermat_sub_u32(a, b):
+    return jnp.where(a >= b, a - b, a + jnp.uint32(FERMAT_Q) - b)
+
+
+def _ntt_kernel(x_ref, tw_ref, o_ref, *, K: int, inverse: bool):
+    """DIF butterflies forward; stage-wise inverse (DIT form, inverse
+    twiddles, reversed stage order) for the inverse transform."""
+    H = int(math.log2(K))
+    x = x_ref[...].astype(jnp.uint32)  # (K, bw)
+    stages = range(H - 1, -1, -1) if inverse else range(H)
+    for h in stages:
+        half = K >> (h + 1)
+        groups = K // (2 * half)
+        xr = x.reshape(groups, 2 * half, -1)
+        u = xr[:, :half]
+        v = xr[:, half:]
+        twr = tw_ref[h, :].reshape(groups, half)[:, :, None]
+        if inverse:
+            # inverse of the DIF stage: u' = a + b*w^-1, v' = a - b*w^-1
+            # (the 1/2-per-stage factors fold into the final K^-1 scale)
+            bw_ = _fermat_mul_u32(v, twr)
+            s = _fermat_add_u32(u, bw_)
+            d = _fermat_sub_u32(u, bw_)
+        else:
+            # DIF: u' = u + v, v' = (u - v) * w
+            s = _fermat_add_u32(u, v)
+            d = _fermat_mul_u32(_fermat_sub_u32(u, v), twr)
+        x = jnp.concatenate([s, d], axis=1).reshape(K, -1)
+    o_ref[...] = x
+
+
+@functools.partial(jax.jit, static_argnames=("inverse", "bw", "interpret"))
+def ntt(x: jnp.ndarray, *, inverse: bool = False, bw: int = 128,
+        interpret: bool = True) -> jnp.ndarray:
+    """Batched NTT along axis 0: x (K, W) uint32 in [0, q).
+
+    Forward: out[k] = sum_j x[j] * beta^(j * rev(k))   (== x @ D_K Pi).
+    Inverse: exact inverse of forward (includes the 1/K scaling).
+    """
+    x = x.astype(jnp.uint32)
+    K, W = x.shape
+    H = int(math.log2(K))
+    assert 2**H == K, "K must be a power of two"
+    tw = jnp.asarray(ntt_twiddles(K, inverse=inverse))
+
+    pad = (-W) % bw
+    xp = jnp.pad(x, ((0, 0), (0, pad))) if pad else x
+    Wp = xp.shape[1]
+    out = pl.pallas_call(
+        functools.partial(_ntt_kernel, K=K, inverse=inverse),
+        grid=(Wp // bw,),
+        in_specs=[
+            pl.BlockSpec((K, bw), lambda w: (0, w)),
+            pl.BlockSpec((H, K // 2), lambda w: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((K, bw), lambda w: (0, w)),
+        out_shape=jax.ShapeDtypeStruct((K, Wp), jnp.uint32),
+        interpret=interpret,
+    )(xp, tw)
+    out = out[:, :W]
+    if inverse:
+        kinv = jnp.uint32(pow(K, FERMAT_Q - 2, FERMAT_Q))
+        out = _fermat_mul_u32(out, kinv)
+    return out
+
+
+def ntt_ref(x: jnp.ndarray, inverse: bool = False) -> np.ndarray:
+    """Oracle: direct matmul against the (permuted) DFT matrix."""
+    from repro.core.matrices import gauss_inverse, permuted_dft_matrix
+
+    K = x.shape[0]
+    D = permuted_dft_matrix(FERMAT, K, 2)
+    if inverse:
+        D = gauss_inverse(FERMAT, D)
+    return (FERMAT.matmul(D.T, np.asarray(x, np.int64))).astype(np.uint32)

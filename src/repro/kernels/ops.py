@@ -1,0 +1,33 @@
+"""Jitted public wrappers around the Pallas kernels.
+
+`encode_blocks` is the entry point used by the coded-checkpoint and
+shard_map layers: it picks the Pallas kernel for large operands and the
+pure-jnp reference for small ones (kernel launch overhead dominates below
+~128x128), keeping one call site for the encode hot-spot.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .gf_matmul import gf_matmul
+from .ref import gf_matmul_ref
+
+_PALLAS_MIN_DIM = 128
+
+
+def encode_blocks(x: jnp.ndarray, coeffs: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """y = x^T-style field encode: (S, W) data against (S, T) coefficients.
+
+    Returns (T, W) = coeffs.T @ x over F_65537.
+    """
+    a = coeffs.T.astype(jnp.uint32)  # (T, S)
+    b = x.astype(jnp.uint32)  # (S, W)
+    if min(a.shape + b.shape) >= _PALLAS_MIN_DIM:
+        return gf_matmul(a, b, interpret=interpret)
+    return gf_matmul_ref(a, b)
+
+
+@jax.jit
+def field_matmul_small(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    return gf_matmul_ref(a.astype(jnp.uint32), b.astype(jnp.uint32))

@@ -1,0 +1,33 @@
+"""Pure-jnp oracles for the Pallas kernels (exact, uint32, CPU/TPU safe)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.field import FERMAT_Q, fermat_add, fermat_mul, fermat_reduce
+
+
+def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """(a @ b) mod 65537, exact, no 64-bit: reduce each product, chunked sums.
+
+    a: (M, K) uint32 in [0, q); b: (K, N) uint32 in [0, q).
+    Accumulates reduced products (each < 2^17) in uint32 chunks of <= 2^15
+    terms (2^15 * 2^17 = 2^32 boundary-safe since products < q <= 2^16+1:
+    32768 * 65536 < 2^31 * 2... we use 16384-chunks for a clean margin).
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    M, K = a.shape
+    K2, N = b.shape
+    assert K == K2
+    chunk = 16384
+    out = jnp.zeros((M, N), jnp.uint32)
+    for s in range(0, K, chunk):
+        e = min(K, s + chunk)
+        prods = fermat_mul(a[:, s:e, None], b[None, s:e, :])  # (M, c, N) < q
+        out = fermat_add(out, fermat_reduce(jnp.sum(prods, axis=1, dtype=jnp.uint32)))
+    return out
+
+
+def gf_axpy_ref(coef: jnp.ndarray, x: jnp.ndarray, y: jnp.ndarray) -> jnp.ndarray:
+    """y + coef * x (mod q), elementwise with broadcast."""
+    return fermat_add(y, fermat_mul(coef, x))

@@ -1,0 +1,290 @@
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this produces (into --out JSON, one file per cell so runs are
+resumable):
+  * memory_analysis()  — per-device bytes: proves the cell fits HBM
+  * cost_analysis()    — HLO FLOPs / bytes accessed for §Roofline
+  * collective byte census parsed from the compiled HLO
+  * roofline terms (compute / memory / collective seconds) + dominant term
+  * MODEL_FLOPS = 6*N_active*tokens (train) or 2*N_active*tokens (fwd-only)
+    and the usefulness ratio MODEL_FLOPS / HLO_FLOPs.
+
+Usage:
+  python -m repro.launch.dryrun --arch qwen3_14b --shape train_4k --mesh single
+  python -m repro.launch.dryrun --all --mesh both --out-dir results/dryrun
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs import ARCH_IDS, cell_applicable, get_config, get_shape
+from ..data.pipeline import make_batch_specs
+from ..dist import sharding as shd
+from ..dist.ctx import activation_sharding
+from ..models import model as M
+from ..models.config import ArchConfig, ShapeConfig
+from ..train.state import TrainState, abstract_state, make_train_setup
+from ..train.train_loop import make_train_step
+from .hlo_cost import analyze as hlo_analyze
+from .mesh import HBM_BW, ICI_BW, PEAK_FLOPS, make_production_mesh, mesh_axis_sizes
+
+
+# ---------------------------------------------------------------------------
+# analytic model FLOPs (the "useful work" yardstick)
+# ---------------------------------------------------------------------------
+
+def active_params(cfg: ArchConfig) -> tuple[int, int]:
+    """(total, active) parameter counts from the config arithmetic."""
+    D, V, L = cfg.d_model, cfg.vocab, cfg.n_layers
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    emb = V * D * (1 if cfg.tie_embeddings else 2)
+    attn = D * hd * (H + 2 * KV) + H * hd * D if H else 0
+    per_layer_dense = attn
+    if cfg.family == "ssm":
+        DI, N, SH = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per_layer_dense = D * (2 * DI + 2 * N + SH) + DI * D
+        ffn_total = ffn_active = 0
+    elif cfg.family == "hybrid":
+        DI, N, SH = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+        per_layer_dense += D * (2 * DI + 2 * N + SH) + DI * D
+        ffn_total = ffn_active = 3 * D * cfg.d_ff
+    elif cfg.n_experts:
+        ffn_total = cfg.n_experts * 3 * D * cfg.d_ff + D * cfg.n_experts
+        ffn_active = (cfg.top_k + cfg.n_shared_experts) * 3 * D * cfg.d_ff
+    else:
+        ffn_total = ffn_active = 3 * D * cfg.d_ff
+    enc = cfg.n_enc_layers * (attn + 3 * D * cfg.d_ff) if cfg.n_enc_layers else 0
+    total = emb + L * (per_layer_dense + ffn_total) + enc
+    active = emb + L * (per_layer_dense + ffn_active) + enc
+    return total, active
+
+
+def model_flops(cfg: ArchConfig, shape: ShapeConfig) -> float:
+    _, active = active_params(cfg)
+    # PaLM-style convention: matmul params = non-embedding + the unembed
+    # projection (a real 2*V*D matmul per token); the embed gather is free.
+    non_emb = active - cfg.vocab * cfg.d_model * (1 if cfg.tie_embeddings else 2)
+    non_emb = non_emb + cfg.vocab * cfg.d_model
+    if shape.is_train:
+        tokens = shape.seq_len * shape.global_batch
+        return 6.0 * non_emb * tokens
+    if shape.kind == "prefill":
+        tokens = shape.seq_len * shape.global_batch
+        return 2.0 * non_emb * tokens
+    # decode: one token per sequence + KV attention reads (flops ~ 2*N*B)
+    return 2.0 * non_emb * shape.global_batch
+
+
+# ---------------------------------------------------------------------------
+# step builders
+# ---------------------------------------------------------------------------
+
+def build_cell(cfg: ArchConfig, shape: ShapeConfig, mesh, multi_pod: bool):
+    """Returns (fn, example_args, in_shardings, out_shardings)."""
+    sizes = mesh_axis_sizes(mesh)
+    ns = lambda spec: jax.tree.map(lambda s: NamedSharding(mesh, s), spec)
+
+    if shape.is_train:
+        opt, _ = make_train_setup(cfg)
+        step = make_train_step(cfg, opt, microbatches=1)
+        state = abstract_state(cfg, opt)
+        batch = make_batch_specs(cfg, shape)
+        pspec = shd.param_specs(cfg, state.params, sizes, multi_pod)
+        ospec = shd.opt_state_specs(cfg, state.params, state.opt_state, sizes, multi_pod)
+        sspec = TrainState(P(), pspec, ospec)
+        bspec = shd.batch_specs(cfg, batch, sizes, multi_pod)
+        in_sh = (ns(sspec), ns(bspec))
+        out_sh = (ns(sspec), ns(jax.tree.map(lambda *_: P(), {"loss": 0, "grad_norm": 0, "lr_step": 0})))
+        return step, (state, batch), in_sh, out_sh
+
+    params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    pspec = shd.param_specs(cfg, params, sizes, multi_pod)
+    if shape.kind == "prefill":
+        batch = make_batch_specs(cfg, shape)
+        bspec = shd.batch_specs(cfg, batch, sizes, multi_pod)
+
+        def prefill(p, b):
+            return M.forward(cfg, p, b)
+
+        logits_spec = shd.batch_specs(
+            cfg, jax.eval_shape(prefill, params, batch), sizes, multi_pod)
+        return prefill, (params, batch), (ns(pspec), ns(bspec)), ns(logits_spec)
+
+    # decode
+    B = shape.global_batch
+    enc_shape = None
+    if cfg.family == "encdec":
+        enc_shape = jax.ShapeDtypeStruct((B, cfg.n_frames, cfg.d_model), jnp.bfloat16)
+    cache = jax.eval_shape(
+        lambda: M.init_cache(cfg, B, shape.seq_len))
+    cspec = shd.cache_specs(cfg, cache, sizes, multi_pod)
+    token = jax.ShapeDtypeStruct((B,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+    bspec_tok = shd.batch_specs(cfg, token, sizes, multi_pod)
+
+    if cfg.family == "encdec":
+        def decode(p, tok, pos_, c, enc):
+            return M.decode_step(cfg, p, tok, pos_, c, enc)
+        espec = shd.batch_specs(cfg, enc_shape, sizes, multi_pod)
+        logits = jax.eval_shape(decode, params, token, pos, cache, enc_shape)
+        lspec = (shd.batch_specs(cfg, logits[0], sizes, multi_pod), cspec)
+        return (decode, (params, token, pos, cache, enc_shape),
+                (ns(pspec), ns(bspec_tok), ns(P()), ns(cspec), ns(espec)),
+                ns(lspec))
+
+    def decode(p, tok, pos_, c):
+        return M.decode_step(cfg, p, tok, pos_, c)
+
+    logits = jax.eval_shape(decode, params, token, pos, cache)
+    lspec = (shd.batch_specs(cfg, logits[0], sizes, multi_pod), cspec)
+    return (decode, (params, token, pos, cache),
+            (ns(pspec), ns(bspec_tok), ns(P()), ns(cspec)), ns(lspec))
+
+
+# ---------------------------------------------------------------------------
+# per-cell dry-run
+# ---------------------------------------------------------------------------
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             quantize_kv: bool = False) -> dict:
+    import dataclasses
+
+    cfg = get_config(arch)
+    if quantize_kv:
+        cfg = dataclasses.replace(cfg, quantize_kv=True)
+    shape = get_shape(shape_name)
+    ok, why = cell_applicable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "skipped": why}
+    multi_pod = mesh_kind == "multi"
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+
+    t0 = time.time()
+    fn, args, in_sh, out_sh = build_cell(cfg, shape, mesh, multi_pod)
+    with mesh, activation_sharding(mesh, multi_pod):
+        jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    cost = compiled.cost_analysis()
+    cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+    hlo = compiled.as_text()
+    # loop-trip-scaled census (cost_analysis counts while bodies once —
+    # verified; see hlo_cost.py docstring)
+    census = hlo_analyze(hlo)
+    coll = {"per_kind": census["collectives_by_kind"],
+            "total": {"weighted_bytes": census["collective_bytes"]}}
+
+    flops_dev = float(census["flops"])
+    bytes_dev = float(census["bytes"])
+    coll_dev = float(census["collective_bytes"])
+    xla_reported = {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+    }
+    compute_s = flops_dev / PEAK_FLOPS
+    memory_s = bytes_dev / HBM_BW
+    collective_s = coll_dev / ICI_BW
+    terms = {"compute_s": compute_s, "memory_s": memory_s,
+             "collective_s": collective_s}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(cfg, shape)
+    mf_dev = mf / n_dev
+    total_p, active_p = active_params(cfg)
+
+    result = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "n_devices": n_dev,
+        "lower_s": round(t_lower, 1), "compile_s": round(t_compile, 1),
+        "memory": {
+            "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+            "output_bytes": getattr(mem, "output_size_in_bytes", None),
+            "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+            "code_bytes": getattr(mem, "generated_code_size_in_bytes", None),
+        },
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "xla_cost_analysis_unscaled": xla_reported,
+        "collectives": coll,
+        "roofline": {
+            **terms,
+            "dominant": dominant,
+            "bound_s": max(terms.values()),
+        },
+        "model_flops_global": mf,
+        "model_flops_per_device": mf_dev,
+        "useful_ratio": (mf_dev / flops_dev) if flops_dev else None,
+        "params_total": total_p,
+        "params_active": active_p,
+        "roofline_fraction": (mf_dev / PEAK_FLOPS) / max(max(terms.values()), 1e-12),
+    }
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="single", choices=["single", "multi", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out-dir", default="results/dryrun")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--quantize-kv", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = Path(args.out_dir)
+    out_dir.mkdir(parents=True, exist_ok=True)
+    archs = [a for a in ARCH_IDS if a != "paper_rs"] if args.all else [args.arch]
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"] \
+        if args.all else [args.shape]
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+
+    for arch in archs:
+        for shp in shapes:
+            for mk in meshes:
+                out = out_dir / f"{arch}__{shp}__{mk}.json"
+                if out.exists() and not args.force:
+                    print(f"skip (cached): {out.name}")
+                    continue
+                print(f"=== {arch} x {shp} x {mk} ===", flush=True)
+                try:
+                    res = run_cell(arch, shp, mk, quantize_kv=args.quantize_kv)
+                except Exception as e:  # record failures — they are bugs
+                    res = {"arch": arch, "shape": shp, "mesh": mk,
+                           "error": f"{type(e).__name__}: {e}",
+                           "traceback": traceback.format_exc()[-4000:]}
+                out.write_text(json.dumps(res, indent=1, default=str))
+                if "error" in res:
+                    print(f"  ERROR: {res['error'][:300]}", flush=True)
+                elif "skipped" in res:
+                    print(f"  SKIP: {res['skipped']}", flush=True)
+                else:
+                    r = res["roofline"]
+                    print(f"  lower={res['lower_s']}s compile={res['compile_s']}s "
+                          f"dominant={r['dominant']} "
+                          f"roofline_frac={res['roofline_fraction']:.3f}",
+                          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,272 @@
+"""Mini HLO cost model with *loop-trip scaling*.
+
+XLA's HloCostAnalysis (what `compiled.cost_analysis()` reports) counts each
+`while` body ONCE — a 61-layer `lax.scan` therefore under-reports FLOPs by
+~61x (verified empirically; see EXPERIMENTS.md §Dry-run notes).  For the
+roofline we parse the compiled HLO text ourselves:
+
+  * per-computation census: dot FLOPs (from result shape x contracted dims),
+    elementwise/reduce byte traffic, collective bytes with ring transfer
+    factors (all-gather/reduce-scatter (n-1)/n, all-reduce 2(n-1)/n,
+    collective-permute 1)
+  * call graph: `while` ops multiply their body+condition costs by the trip
+    count recovered from the canonical scan pattern (condition compares the
+    induction variable against a `constant(N)`); fusions/calls add their
+    callee costs once
+  * totals roll up from the entry computation.
+
+Numbers are per-DEVICE (the module is the SPMD-partitioned program).
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1,
+}
+
+_SHAPE_TOKEN = re.compile(r"(\w+)\[([\d,]*)\](?:\{[^}]*\})?")
+_INSTR = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(\(?[^=]*?)\s*([\w\-]+)\((.*)$")
+_COLLECTIVES = {"all-gather": 1.0, "all-reduce": 2.0, "reduce-scatter": 1.0,
+                "all-to-all": 1.0, "collective-permute": 1.0}
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_TOKEN.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_elems(shape_str: str) -> int:
+    m = _SHAPE_TOKEN.search(shape_str)
+    if not m:
+        return 0
+    n = 1
+    for d in m.group(2).split(","):
+        if d:
+            n *= int(d)
+    return n
+
+
+@dataclass
+class CompCost:
+    flops: float = 0.0
+    bytes: float = 0.0            # memory traffic proxy
+    coll_bytes: float = 0.0       # weighted collective bytes
+    coll_by_kind: dict = field(default_factory=dict)
+    calls: list = field(default_factory=list)   # (callee, kind)
+    shapes: dict = field(default_factory=dict)  # instr name -> shape str
+
+
+_COMMENT = re.compile(r"/\*.*?\*/")
+
+
+def _strip_comments(line: str) -> str:
+    return _COMMENT.sub("", line)
+
+
+def _header_name(line: str) -> str | None:
+    """Computation header: '%name (params...) -> shape {' (no '=')."""
+    line = _strip_comments(line)
+    if "=" in line or "->" not in line or not line.rstrip().endswith("{"):
+        return None
+    m = re.match(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(", line)
+    return m.group(1) if m else None
+
+
+def parse_hlo(text: str) -> dict[str, CompCost]:
+    comps: dict[str, CompCost] = {}
+    cur: CompCost | None = None
+    cur_name = None
+    for raw in text.splitlines():
+        line = _strip_comments(raw.rstrip())
+        hname = _header_name(line)
+        if hname:
+            cur_name = hname
+            cur = comps.setdefault(cur_name, CompCost())
+            continue
+        if cur is None:
+            continue
+        m = _INSTR.match(line)
+        if not m:
+            continue
+        name, shape_str, op, rest = m.groups()
+        cur.shapes[name] = shape_str
+        out_bytes = _shape_bytes(shape_str)
+        # HBM-traffic proxy: skip bookkeeping ops; DUS is in-place (traffic =
+        # 2x the updated slice, not the full buffer)
+        if op in ("tuple", "get-tuple-element", "bitcast", "parameter",
+                  "constant", "iota", "after-all", "partition-id"):
+            pass
+        elif op == "dynamic-update-slice":
+            ops_names = re.findall(r"%([\w.\-]+)", rest)
+            upd = _shape_bytes(cur.shapes.get(ops_names[1], "")) if len(ops_names) > 1 else 0
+            cur.bytes += 2 * upd
+        else:
+            cur.bytes += out_bytes  # output write (reads ~ prior writes)
+
+        if op in ("dot", "dot-general") or op == "convolution":
+            flops = _dot_flops(shape_str, rest, cur.shapes)
+            cur.flops += flops
+        elif op in ("add", "multiply", "subtract", "divide", "maximum",
+                    "minimum", "exponential", "tanh", "rsqrt", "power",
+                    "log", "negate", "compare", "select"):
+            cur.flops += _shape_elems(shape_str)
+        elif op == "reduce":
+            cur.flops += _shape_elems(shape_str)  # coarse
+
+        for kind, factor in _COLLECTIVES.items():
+            if op == kind or op == f"{kind}-start":
+                n = _group_size(line)
+                w = out_bytes * (factor * (n - 1) / n if n > 1 else
+                                 (1.0 if kind == "collective-permute" else 0.0))
+                if kind == "collective-permute":
+                    w = out_bytes
+                # XLA-CPU FloatNormalization promotes bf16 reductions to f32
+                # (to_apply=%..._promoted); on the TPU target these collectives
+                # run in bf16 — halve to model the real wire traffic.
+                if "promoted" in line and kind in ("all-reduce", "reduce-scatter"):
+                    w *= 0.5
+                cur.coll_bytes += w
+                k = cur.coll_by_kind.setdefault(kind, [0, 0.0])
+                k[0] += 1
+                k[1] += w
+                break
+
+        if op == "while":
+            body = _attr(line, "body")
+            cond = _attr(line, "condition")
+            if body:
+                cur.calls.append((body, "while", cond, name))
+        elif op in ("call", "fusion"):
+            callee = _attr(line, "calls") or _attr(line, "to_apply")
+            if callee:
+                cur.calls.append((callee, "call", None, name))
+        elif op in ("reduce", "map", "sort", "scatter", "select-and-scatter",
+                    "reduce-window", "custom-call", "conditional"):
+            callee = _attr(line, "to_apply")
+            if callee:
+                cur.calls.append((callee, "call", None, name))
+    return comps
+
+
+def _attr(line: str, key: str) -> str | None:
+    m = re.search(rf"{key}=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _group_size(line: str) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", line)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([^}]*)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    return 2  # unknown: conservative
+
+
+def _dot_flops(result_shape: str, rest: str, shapes: dict) -> float:
+    """2 * result_elems * contracted_size."""
+    res = _shape_elems(result_shape)
+    # operand 0 name
+    ops = re.findall(r"%?([\w.\-]+)", rest.split(")", 1)[0])
+    contracted = 1
+    mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
+    if mc and ops:
+        lhs_shape = shapes.get(ops[0], "")
+        mt = _SHAPE_TOKEN.search(lhs_shape)
+        if mt:
+            dims = [int(d) for d in mt.group(2).split(",") if d]
+            for ci in mc.group(1).split(","):
+                if ci and int(ci) < len(dims):
+                    contracted *= dims[int(ci)]
+    return 2.0 * res * max(contracted, 1)
+
+
+def analyze(text: str, entry_hint: str | None = None) -> dict:
+    comps = parse_hlo(text)
+    # constants for trip counts: quick scan of the raw text per computation
+    trip_consts: dict[str, int] = {}
+    cur = None
+    for line in text.splitlines():
+        hname = _header_name(line)
+        if hname:
+            cur = hname
+            continue
+        if cur and "constant(" in line and "s32[]" in line:
+            m = re.search(r"constant\((\d+)\)", line)
+            if m:
+                trip_consts[cur] = max(trip_consts.get(cur, 1), int(m.group(1)))
+
+    memo: dict[str, tuple] = {}
+
+    def merge_kinds(dst: dict, src: dict, mult: float) -> None:
+        for k, v in src.items():
+            e = dst.setdefault(k, [0, 0.0])
+            e[0] += v[0] * mult
+            e[1] += v[1] * mult
+
+    def roll(name: str, depth=0) -> tuple:
+        """(flops, bytes, coll_bytes, kinds) with loops scaled by trips.
+
+        Fusion/call bodies contribute flops + collectives but NOT bytes —
+        the caller's fusion instruction already accounts for the kernel's
+        HBM in/out traffic; while bodies contribute everything x trips.
+        """
+        if name in memo:
+            return memo[name]
+        if name not in comps or depth > 60:
+            return (0.0, 0.0, 0.0, {})
+        memo[name] = (0.0, 0.0, 0.0, {})  # cycle guard
+        c = comps[name]
+        fl, by, cb = c.flops, c.bytes, c.coll_bytes
+        kinds = {k: list(v) for k, v in c.coll_by_kind.items()}
+        for call in c.calls:
+            callee, kind = call[0], call[1]
+            cf, cby, ccb, ck = roll(callee, depth + 1)
+            if kind == "while":
+                cond = call[2]
+                mult = trip_consts.get(cond, trip_consts.get(callee, 1))
+                cf2, cby2, ccb2, ck2 = roll(cond, depth + 1)
+                fl += (cf + cf2) * mult
+                by += (cby + cby2) * mult
+                cb += (ccb + ccb2) * mult
+                merge_kinds(kinds, ck, mult)
+                merge_kinds(kinds, ck2, mult)
+            else:
+                fl += cf
+                cb += ccb
+                merge_kinds(kinds, ck, 1)
+        memo[name] = (fl, by, cb, kinds)
+        return memo[name]
+
+    # entry = computation named like the module or the last 'ENTRY'
+    entry = None
+    for line in text.splitlines():
+        if line.strip().startswith("ENTRY"):
+            m = re.match(r"^\s*ENTRY\s+%?([\w.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        entry = max(comps, key=lambda n: comps[n].flops, default=None)
+    fl, by, cb, kinds = roll(entry) if entry else (0, 0, 0, {})
+    return {
+        "entry": entry,
+        "flops": fl,
+        "bytes": by,
+        "collective_bytes": cb,
+        "collectives_by_kind": {k: {"count": v[0], "weighted_bytes": v[1]}
+                                for k, v in kinds.items()},
+        "n_computations": len(comps),
+    }

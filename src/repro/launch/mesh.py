@@ -1,0 +1,33 @@
+"""Production meshes.
+
+Defined as FUNCTIONS (never module-level constants) so importing this module
+never touches jax device state — the dry-run must set
+--xla_force_host_platform_device_count *before* any jax initialization.
+
+Hardware model (roofline constants): TPU v5e-class chip —
+197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import jax
+
+PEAK_FLOPS = 197e12     # bf16 per chip
+HBM_BW = 819e9          # bytes/s per chip
+ICI_BW = 50e9           # bytes/s per link
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 4, model: int = 2):
+    """Small mesh for multi-device tests on forced host devices."""
+    return jax.make_mesh((data, model), ("data", "model"))
+
+
+def mesh_axis_sizes(mesh) -> dict[str, int]:
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    sizes.setdefault("pod", 1)
+    return sizes

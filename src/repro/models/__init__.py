@@ -1,0 +1,4 @@
+from .config import SHAPES, ArchConfig, ShapeConfig
+from . import model, layers, ssm
+
+__all__ = ["SHAPES", "ArchConfig", "ShapeConfig", "model", "layers", "ssm"]

@@ -1,0 +1,399 @@
+"""Transformer building blocks: RMSNorm, RoPE, GQA attention (qk-norm /
+bias / sliding-window variants), gated MLP, MoE with sort-free bucket
+dispatch.  Pure functions over param pytrees (no flax; raw JAX)."""
+from __future__ import annotations
+
+import math
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..dist.ctx import constrain
+from .config import ArchConfig
+
+Params = dict[str, Any]
+
+
+def _dtype(cfg: ArchConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key, shape, scale: float | None = None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) >= 2 else 1
+    scale = scale if scale is not None else 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms / rope / activation
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x, w, eps: float):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * w.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(hd: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, hd, 2, dtype=np.float32) / hd))
+
+
+def apply_rope(x, positions, theta: float):
+    """x: (..., S, H, hd); positions: (..., S) int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def act_fn(name: str):
+    return {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu}[name]
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA; causal / sliding-window / cross / bidirectional)
+# ---------------------------------------------------------------------------
+
+def init_attention(key, cfg: ArchConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 8)
+    hd, H, KV, D = cfg.hd, cfg.n_heads, cfg.n_kv_heads, cfg.d_model
+    dt = _dtype(cfg)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dt),
+        "wk": dense_init(ks[1], (D, KV * hd), dtype=dt),
+        "wv": dense_init(ks[2], (D, KV * hd), dtype=dt),
+        "wo": dense_init(ks[3], (H * hd, D), dtype=dt),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), dt)
+        p["bk"] = jnp.zeros((KV * hd,), dt)
+        p["bv"] = jnp.zeros((KV * hd,), dt)
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.float32)
+        p["k_norm"] = jnp.ones((hd,), jnp.float32)
+    return p
+
+
+def _project_qkv(p, cfg: ArchConfig, xq, xkv, q_positions, kv_positions, use_rope):
+    B, Sq, _ = xq.shape
+    Skv = xkv.shape[1]
+    hd, H, KV = cfg.hd, cfg.n_heads, cfg.n_kv_heads
+    q = xq @ p["wq"]
+    k = xkv @ p["wk"]
+    v = xkv @ p["wv"]
+    if cfg.qkv_bias:
+        q, k, v = q + p["bq"], k + p["bk"], v + p["bv"]
+    q = q.reshape(B, Sq, H, hd)
+    k = k.reshape(B, Skv, KV, hd)
+    v = v.reshape(B, Skv, KV, hd)
+    if cfg.qk_norm:
+        q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, p["k_norm"], cfg.norm_eps)
+    if use_rope:
+        q = apply_rope(q, q_positions, cfg.rope_theta)
+        k = apply_rope(k, kv_positions, cfg.rope_theta)
+    return q, k, v
+
+
+def _sdpa(q, k, v, mask, cfg: ArchConfig):
+    """q: (B,Sq,H,hd), k/v: (B,Skv,KV,hd), mask broadcastable (B,1,Sq,Skv)."""
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    rep = H // KV
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k).astype(jnp.float32) * scale
+    if mask is not None:
+        logits = jnp.where(mask, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1).astype(q.dtype)
+    return jnp.einsum("bhqk,bkhd->bqhd", w, v)
+
+
+# chunked attention kicks in above this sequence length (S^2 score tensors
+# at 4k+ dominate per-device HBM; see EXPERIMENTS.md §Perf iteration 1)
+CHUNKED_ATTN_THRESHOLD = 4096
+_Q_CHUNK = 512
+_KV_CHUNK = 1024
+
+
+def _chunked_attention(q, k, v, cfg: ArchConfig, causal: bool, window: int):
+    """Flash-style blockwise attention: outer scan over q-chunks, inner scan
+    over kv-chunks with online softmax. Never materializes (Sq, Skv) scores —
+    the live score block is (B, H, q_chunk, kv_chunk).
+
+    window > 0 (sliding window): the kv range per q-chunk is a single static
+    dynamic-slice of width window + q_chunk (exact, no wasted FLOPs).
+    causal full attention: every kv chunk is visited and masked (<= 2x FLOPs
+    overhead vs triangular skipping; see §Perf notes).
+    """
+    B, Sq, H, hd = q.shape
+    Skv = k.shape[1]
+    KV = k.shape[2]
+    rep = H // KV
+    if rep > 1:
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    scale = 1.0 / math.sqrt(cfg.hd)
+    cq = min(_Q_CHUNK, Sq)
+    nq = Sq // cq
+    assert Sq % cq == 0
+
+    qs = q.reshape(B, nq, cq, H, hd)
+
+    def q_block(_, qi):
+        qb = qs[:, qi] * scale  # (B, cq, H, hd)
+        q_start = qi * cq
+
+        if window > 0:
+            kw = window + cq
+            start = jnp.clip(q_start + cq - kw, 0, max(Skv - kw, 0))
+            kb = jax.lax.dynamic_slice_in_dim(k, start, min(kw, Skv), axis=1)
+            vb = jax.lax.dynamic_slice_in_dim(v, start, min(kw, Skv), axis=1)
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32)
+            qpos = q_start + jnp.arange(cq)[:, None]
+            kpos = start + jnp.arange(kb.shape[1])[None, :]
+            msk = (kpos <= qpos) & (kpos > qpos - window)
+            s = jnp.where(msk[None, None], s, -1e30)
+            w = jax.nn.softmax(s, axis=-1).astype(qb.dtype)
+            ob = jnp.einsum("bhqk,bkhd->bqhd", w, vb)
+            return None, ob
+
+        ck = min(_KV_CHUNK, Skv)
+        nk = Skv // ck
+        ks = k.reshape(B, nk, ck, H, hd)
+        vs = v.reshape(B, nk, ck, H, hd)
+
+        def kv_block(carry, ki):
+            m, l, acc = carry  # running max, denom, unnormalized out
+            kb = ks[:, ki]
+            vb = vs[:, ki]
+            s = jnp.einsum("bqhd,bkhd->bhqk", qb, kb).astype(jnp.float32)
+            if causal:
+                qpos = q_start + jnp.arange(cq)[:, None]
+                kpos = ki * ck + jnp.arange(ck)[None, :]
+                s = jnp.where((kpos <= qpos)[None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[..., None])
+            l_new = l * alpha + jnp.sum(p, axis=-1)
+            acc = acc * alpha[..., None] + jnp.einsum(
+                "bhqk,bkhd->bhqd", p.astype(qb.dtype), vb).astype(jnp.float32)
+            return (m_new, l_new, acc), None
+
+        init = (jnp.full((B, H, cq), -jnp.inf, jnp.float32),
+                jnp.zeros((B, H, cq), jnp.float32),
+                jnp.zeros((B, H, cq, hd), jnp.float32))
+        (m, l, acc), _ = jax.lax.scan(kv_block, init, jnp.arange(nk))
+        ob = (acc / l[..., None]).astype(qb.dtype)  # (B, H, cq, hd)
+        return None, jnp.moveaxis(ob, 1, 2)
+
+    _, blocks = jax.lax.scan(q_block, None, jnp.arange(nq))  # (nq,B,cq,H,hd)
+    return jnp.moveaxis(blocks, 0, 1).reshape(B, Sq, H, hd)
+
+
+def causal_mask(Sq: int, Skv: int, q_offset, window: int = 0):
+    """(1, 1, Sq, Skv) bool; window > 0 = sliding window attention."""
+    qpos = q_offset + jnp.arange(Sq)[:, None]
+    kpos = jnp.arange(Skv)[None, :]
+    m = kpos <= qpos
+    if window > 0:
+        m = m & (kpos > qpos - window)
+    return m[None, None]
+
+
+def attention(
+    p: Params,
+    cfg: ArchConfig,
+    x,
+    positions,
+    *,
+    mode: str = "causal",       # causal | bidir | cross
+    window: int = 0,
+    kv_src=None,                # cross-attention source
+    cache: Params | None = None,
+    cache_pos=None,             # scalar int32: decode write position
+):
+    """Returns (out, new_cache). Full-sequence when cache is None; otherwise
+    single-token decode that updates the (B, max_len, KV, hd) cache in place."""
+    B, Sq, _ = x.shape
+    if mode == "cross":
+        if cache is not None:
+            k, v = cache["k"], cache["v"]  # precomputed encoder KV
+            q = (x @ p["wq"]).reshape(B, Sq, cfg.n_heads, cfg.hd)
+            if cfg.qk_norm:
+                q = rmsnorm(q, p["q_norm"], cfg.norm_eps)
+            out = _sdpa(q, k, v, None, cfg)
+            return out.reshape(B, Sq, -1) @ p["wo"], cache
+        kv_pos = jnp.arange(kv_src.shape[1])[None]
+        q, k, v = _project_qkv(p, cfg, x, kv_src, positions, kv_pos, use_rope=False)
+        out = _sdpa(q, k, v, None, cfg)
+        return out.reshape(B, Sq, -1) @ p["wo"], {"k": k, "v": v}
+
+    use_rope = True
+    if cache is None:
+        q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope)
+        if Sq > CHUNKED_ATTN_THRESHOLD and Sq % _Q_CHUNK == 0 and mode != "bidir":
+            out = _chunked_attention(q, k, v, cfg, causal=True, window=window)
+        else:
+            mask = None if mode == "bidir" else causal_mask(Sq, Sq, 0, window)
+            out = _sdpa(q, k, v, mask, cfg)
+        return out.reshape(B, Sq, -1) @ p["wo"], {"k": k, "v": v}
+
+    # ---- decode: Sq == 1, append to cache --------------------------------
+    # Ring-buffer support: when the cache length L is shorter than the
+    # stream (sliding-window archs allocate L == window), slot = pos mod L
+    # and every filled slot is, by construction, within the window — a
+    # 500k-token hymba decode carries a 1k-slot cache (§Perf iteration 6).
+    # int8 KV (cfg.quantize_kv): per-token-per-head absmax scales; halves
+    # the cache-read bound (§Perf iteration 7).
+    q, k, v = _project_qkv(p, cfg, x, x, positions, positions, use_rope)
+    L = cache["k"].shape[1]
+    ring = window > 0 and L <= window
+    slot = jax.lax.rem(cache_pos, L) if ring else cache_pos
+    quant = cfg.quantize_kv and "k_scale" in cache
+    if quant:
+        def q8(t):
+            s = jnp.max(jnp.abs(t.astype(jnp.float32)), axis=-1, keepdims=True) / 127.0
+            s = jnp.maximum(s, 1e-8)
+            return jnp.clip(jnp.round(t.astype(jnp.float32) / s), -127, 127
+                            ).astype(jnp.int8), s.astype(jnp.bfloat16)
+        k8, ks = q8(k)
+        v8, vs = q8(v)
+        upd = lambda buf, val: jax.lax.dynamic_update_slice_in_dim(
+            buf, val.astype(buf.dtype), slot, axis=1)
+        new_cache = {"k": upd(cache["k"], k8), "v": upd(cache["v"], v8),
+                     "k_scale": upd(cache["k_scale"], ks),
+                     "v_scale": upd(cache["v_scale"], vs)}
+        k_cache = (new_cache["k"].astype(jnp.bfloat16)
+                   * new_cache["k_scale"].astype(jnp.bfloat16))
+        v_cache = (new_cache["v"].astype(jnp.bfloat16)
+                   * new_cache["v_scale"].astype(jnp.bfloat16))
+    else:
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["k"], k.astype(cache["k"].dtype), slot, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            cache["v"], v.astype(cache["v"].dtype), slot, axis=1)
+        new_cache = {"k": k_cache, "v": v_cache}
+    kpos = jnp.arange(L)[None, :]
+    if ring:
+        valid = kpos < jnp.minimum(cache_pos + 1, L)
+    else:
+        valid = kpos <= cache_pos
+        if window > 0:
+            valid = valid & (kpos > cache_pos - window)
+    mask = valid[None, None]  # (1, 1, 1, L) after broadcast with Sq=1
+    out = _sdpa(q, k_cache, v_cache, mask, cfg)
+    return out.reshape(B, Sq, -1) @ p["wo"], new_cache
+
+
+# ---------------------------------------------------------------------------
+# dense gated MLP
+# ---------------------------------------------------------------------------
+
+def init_mlp(key, cfg: ArchConfig, d_ff: int | None = None) -> Params:
+    ks = jax.random.split(key, 3)
+    dff = d_ff or cfg.d_ff
+    dt = _dtype(cfg)
+    return {
+        "wg": dense_init(ks[0], (cfg.d_model, dff), dtype=dt),
+        "wu": dense_init(ks[1], (cfg.d_model, dff), dtype=dt),
+        "wd": dense_init(ks[2], (dff, cfg.d_model), dtype=dt),
+    }
+
+
+def mlp(p: Params, cfg: ArchConfig, x):
+    return (act_fn(cfg.act)(x @ p["wg"]) * (x @ p["wu"])) @ p["wd"]
+
+
+# ---------------------------------------------------------------------------
+# MoE: sort-free bucket dispatch with static capacity (dropping)
+# ---------------------------------------------------------------------------
+# The Mesh-TF one-hot dispatch einsum costs O(T*E*C*d) matmul FLOPs — for
+# kimi-k2 (E = 384) that is ~5000x the useful expert FLOPs and would poison
+# the roofline.  Instead: top-k routing -> position-in-expert via a single
+# one-hot cumsum (elementwise, no matmul) -> scatter into (E, C, d) buckets
+# -> 3 batched expert matmuls -> gather + weighted combine.  Overflow
+# (pos >= C) drops the assignment, standard capacity-factor semantics.
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 5)
+    E, D, F = cfg.n_experts, cfg.d_model, cfg.d_ff
+    dt = _dtype(cfg)
+    p = {
+        "router": dense_init(ks[0], (D, E), scale=0.02, dtype=jnp.float32),
+        "wg": dense_init(ks[1], (E, D, F), dtype=dt),
+        "wu": dense_init(ks[2], (E, D, F), dtype=dt),
+        "wd": dense_init(ks[3], (E, F, D), dtype=dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = init_mlp(ks[4], cfg, d_ff=cfg.d_ff * cfg.n_shared_experts)
+    return p
+
+
+def moe(p: Params, cfg: ArchConfig, x):
+    """x: (B, S, D) -> (B, S, D).
+
+    GROUPED dispatch: routing, position-in-expert and the bucket scatter are
+    all computed per batch row (vmapped), so under batch=data sharding every
+    dispatch op stays data-local — no cross-data all-reduce of the scatter —
+    and the expert einsums carry a data-sharded group axis, dividing expert
+    FLOPs by the data-parallel degree.  (The original ungrouped dispatch
+    replicated the (E, cap, D) buckets across the data axis: 16x wasted
+    expert compute and a ~15 TB/device all-reduce storm on kimi-k2; see
+    EXPERIMENTS.md §Perf iteration 2.)  Capacity is per-group:
+    cap_g = ceil(cf * S * k / E): overflow drops, standard semantics.
+    """
+    B, S, D = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    cap = max(1, int(cfg.capacity_factor * S * k / E))
+
+    def dispatch_group(xg):
+        """xg: (S, D) one batch row — everything here is data-local."""
+        logits = xg.astype(jnp.float32) @ p["router"]       # (S, E)
+        topv, topi = jax.lax.top_k(logits, k)
+        weights = jax.nn.softmax(topv, axis=-1)             # (S, k)
+        flat_e = topi.reshape(-1)                           # (S*k,)
+        onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+        pos = jnp.cumsum(onehot, axis=0) - onehot
+        pos = jnp.take_along_axis(pos, flat_e[:, None], axis=1)[:, 0]
+        keep = pos < cap
+        tok_idx = jnp.arange(S * k) // k
+        e_idx = jnp.where(keep, flat_e, 0)
+        p_idx = jnp.where(keep, pos, cap - 1)
+        src = jnp.where(keep[:, None], xg[tok_idx], 0)
+        buckets = jnp.zeros((E, cap, D), x.dtype).at[e_idx, p_idx].add(src)
+        return buckets, (e_idx, p_idx, keep, weights)
+
+    buckets, meta = jax.vmap(dispatch_group)(x)             # (B, E, cap, D)
+    # group axis on data, expert axis on model: expert compute is fully
+    # partitioned over the whole mesh
+    buckets = constrain(buckets, "batch", "model", None, None)
+
+    h = jnp.einsum("gecd,edf->gecf", buckets, p["wg"])
+    h = act_fn(cfg.act)(h) * jnp.einsum("gecd,edf->gecf", buckets, p["wu"])
+    out_buckets = jnp.einsum("gecf,efd->gecd", h, p["wd"])  # (B, E, cap, D)
+    out_buckets = constrain(out_buckets, "batch", "model", None, None)
+
+    def combine_group(ob, m):
+        e_idx, p_idx, keep, weights = m
+        gathered = ob[e_idx, p_idx]                          # (S*k, D)
+        gathered = jnp.where(keep[:, None], gathered, 0)
+        w = weights.reshape(-1)[:, None].astype(x.dtype)
+        return jnp.sum((gathered * w).reshape(S, k, D), axis=1)
+
+    y = jax.vmap(combine_group)(out_buckets, meta)           # (B, S, D)
+    if cfg.n_shared_experts:
+        y = y + mlp(p["shared"], cfg, x)
+    return y

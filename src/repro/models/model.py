@@ -1,0 +1,315 @@
+"""Model assembly for all 10 assigned architectures.
+
+One parameter layout per family; homogeneous layer stacks are *stacked*
+(leading axis = layer) and consumed with `jax.lax.scan` so that compile time
+stays O(1) in depth (61-layer kimi traces one layer).  `jax.checkpoint`
+(remat) wraps the per-layer body for training.
+
+Families:
+  dense  — llama-style decoder (qwen3*, minicpm, qwen1.5)
+  moe    — dense skeleton with MoE FFN (kimi-k2, phi3.5-moe)
+  ssm    — mamba2 SSD stack (attention-free)
+  hybrid — hymba: parallel attention + SSM heads per layer, SWA + periodic
+           global layers
+  encdec — whisper: bidirectional encoder (stub frontend) + causal decoder
+           with cross-attention
+  vlm    — llava: mistral decoder over [vision-stub | text] sequence
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from ..dist.ctx import constrain
+from .config import ArchConfig
+from .layers import (
+    Params,
+    _dtype,
+    attention,
+    causal_mask,
+    dense_init,
+    init_attention,
+    init_mlp,
+    init_moe,
+    mlp,
+    moe,
+    rmsnorm,
+)
+from .ssm import init_mamba2, mamba2_decode_step, mamba2_forward
+
+
+# ---------------------------------------------------------------------------
+# per-layer init
+# ---------------------------------------------------------------------------
+
+def _init_layer(key, cfg: ArchConfig, cross: bool = False) -> Params:
+    ks = jax.random.split(key, 6)
+    p: Params = {"ln1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if cfg.family == "ssm":
+        p["ssm"] = init_mamba2(ks[0], cfg)
+        return p
+    p["attn"] = init_attention(ks[0], cfg)
+    p["ln2"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.family == "hybrid":
+        p["ssm"] = init_mamba2(ks[1], cfg)
+        p["attn_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["ssm_norm"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cross:
+        p["xattn"] = init_attention(ks[2], cfg, cross=True)
+        p["ln_x"] = jnp.ones((cfg.d_model,), jnp.float32)
+    if cfg.family == "moe":
+        p["ffn"] = init_moe(ks[3], cfg)
+    else:
+        p["ffn"] = init_mlp(ks[3], cfg)
+    return p
+
+
+def _stack(key, cfg: ArchConfig, n: int, cross: bool = False) -> Params:
+    keys = jax.random.split(key, n)
+    layers = [_init_layer(k, cfg, cross) for k in keys]
+    return jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    ks = jax.random.split(key, 8)
+    dt = _dtype(cfg)
+    p: Params = {
+        "embed": dense_init(ks[0], (cfg.vocab, cfg.d_model), scale=0.02, dtype=dt),
+        "ln_f": jnp.ones((cfg.d_model,), jnp.float32),
+        "layers": _stack(ks[1], cfg, cfg.n_layers, cross=cfg.family == "encdec"),
+    }
+    if not cfg.tie_embeddings:
+        p["unembed"] = dense_init(ks[2], (cfg.d_model, cfg.vocab), dtype=dt)
+    if cfg.family == "encdec":
+        enc_cfg = cfg
+        p["enc_layers"] = _stack(ks[3], enc_cfg, cfg.n_enc_layers)
+        p["enc_ln_f"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["dec_pos"] = dense_init(ks[4], (32768 + 16, cfg.d_model), scale=0.02, dtype=dt)
+    if cfg.family == "vlm":
+        p["vis_proj"] = dense_init(ks[5], (cfg.d_model, cfg.d_model), dtype=dt)
+    return p
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# layer bodies
+# ---------------------------------------------------------------------------
+
+def _res_scale(cfg: ArchConfig) -> float:
+    if cfg.scale_depth:
+        return cfg.scale_depth / math.sqrt(cfg.n_layers)
+    return 1.0
+
+
+def _layer_fwd(cfg: ArchConfig, layer_idx, p: Params, x, positions, enc_out=None):
+    """Full-sequence forward for one layer (train / prefill)."""
+    s = _res_scale(cfg)
+    if cfg.family == "ssm":
+        h, _ = mamba2_forward(p["ssm"], cfg, rmsnorm(x, p["ln1"], cfg.norm_eps))
+        return x + s * h
+
+    # NOTE: hymba's "3 global layers" are approximated by a uniform sliding
+    # window inside the layer-scan (a per-layer static window would break the
+    # stacked-scan homogeneity); documented in DESIGN.md §5.
+    window = cfg.sliding_window
+    xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a, _ = attention(p["attn"], cfg, xin, positions, window=cfg.sliding_window)
+        m, _ = mamba2_forward(p["ssm"], cfg, xin)
+        h = 0.5 * (rmsnorm(a, p["attn_norm"], cfg.norm_eps)
+                   + rmsnorm(m, p["ssm_norm"], cfg.norm_eps))
+        x = x + s * h
+    else:
+        a, _ = attention(p["attn"], cfg, xin, positions, window=window)
+        x = x + s * a
+    if enc_out is not None:
+        xx = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        c, _ = attention(p["xattn"], cfg, xx, positions, mode="cross", kv_src=enc_out)
+        x = x + s * c
+    f_in = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    f = moe(p["ffn"], cfg, f_in) if cfg.family == "moe" else mlp(p["ffn"], cfg, f_in)
+    return x + s * f
+
+
+def _enc_layer_fwd(cfg: ArchConfig, p: Params, x):
+    xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    a, _ = attention(p["attn"], cfg, xin, jnp.arange(x.shape[1])[None], mode="bidir")
+    x = x + a
+    f = mlp(p["ffn"], cfg, rmsnorm(x, p["ln2"], cfg.norm_eps))
+    return x + f
+
+
+# ---------------------------------------------------------------------------
+# full forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _run_stack(cfg: ArchConfig, layers: Params, x, positions, enc_out=None):
+    def body(carry, inp):
+        idx, lp = inp
+        y = _layer_fwd(cfg, idx, lp, carry, positions, enc_out)
+        return y, None
+
+    if cfg.remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    n = cfg.n_layers
+    idxs = jnp.arange(n)
+    x, _ = jax.lax.scan(body, x, (idxs, layers))
+    return x
+
+
+def encode_frames(cfg: ArchConfig, params: Params, frames):
+    """Whisper encoder over stub frame embeddings (B, n_frames, D)."""
+    def body(carry, lp):
+        return _enc_layer_fwd(cfg, lp, carry), None
+
+    x, _ = jax.lax.scan(body, frames, params["enc_layers"])
+    return rmsnorm(x, params["enc_ln_f"], cfg.norm_eps)
+
+
+def forward(cfg: ArchConfig, params: Params, batch: dict) -> jnp.ndarray:
+    """Returns logits (B, S_text, vocab).
+
+    batch: tokens (B, S_text) int32; optional vision_embeds (B, P, D) [vlm],
+    frames (B, F, D) [encdec].
+    """
+    tokens = batch["tokens"]
+    B, S = tokens.shape
+    x = params["embed"][tokens] * cfg.scale_emb
+    positions = jnp.arange(S)[None]
+    enc_out = None
+
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        v = batch["vision_embeds"].astype(x.dtype) @ params["vis_proj"]
+        x = jnp.concatenate([v, x], axis=1)
+        positions = jnp.arange(x.shape[1])[None]
+    if cfg.family == "encdec":
+        enc_out = encode_frames(cfg, params, batch["frames"].astype(x.dtype))
+        x = x + params["dec_pos"][:S][None]
+
+    x = constrain(x, "batch", None, None)
+    x = _run_stack(cfg, params["layers"], x, positions, enc_out)
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    if cfg.family == "vlm" and "vision_embeds" in batch:
+        x = x[:, -S:]  # logits over text positions only
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x @ w_out) / cfg.logit_scale
+    # vocab-sharded logits: keeps the (B, S, V) tensor (the largest activation
+    # by far) distributed over the model axis through the loss
+    logits = constrain(logits, "batch", None, "model")
+    return logits
+
+
+def loss_fn(cfg: ArchConfig, params: Params, batch: dict) -> jnp.ndarray:
+    logits = forward(cfg, params, batch)
+    labels = batch["labels"]
+    # CE via gather + logsumexp: never materializes a second (B, S, V) f32
+    # tensor (log_softmax would); reductions stay vocab-sharded.
+    logits = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    ll = picked - lse
+    mask = batch.get("loss_mask", jnp.ones_like(labels, jnp.float32))
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+
+
+# ---------------------------------------------------------------------------
+# decode (serve_step): one new token against a KV/SSM cache
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int, enc_out=None) -> Params:
+    """Stacked per-layer cache pytree."""
+    dt = _dtype(cfg)
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    n = cfg.n_layers
+    cache: Params = {}
+    if cfg.family != "ssm":
+        # sliding-window archs only ever attend to the last `window` tokens:
+        # allocate a ring buffer of exactly that length (layers.py decode)
+        L = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+        kv_dt = jnp.int8 if cfg.quantize_kv else dt
+        cache["k"] = jnp.zeros((n, batch, L, KV, hd), kv_dt)
+        cache["v"] = jnp.zeros((n, batch, L, KV, hd), kv_dt)
+        if cfg.quantize_kv:
+            cache["k_scale"] = jnp.zeros((n, batch, L, KV, 1), jnp.bfloat16)
+            cache["v_scale"] = jnp.zeros((n, batch, L, KV, 1), jnp.bfloat16)
+    if cfg.family in ("ssm", "hybrid"):
+        H, N, P = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_headdim
+        C = cfg.d_inner + 2 * N
+        cache["ssm"] = jnp.zeros((n, batch, H, N, P), jnp.float32)
+        cache["conv"] = jnp.zeros((n, batch, cfg.ssm_conv - 1, C), dt)
+    # encdec: cross-attention KV is recomputed from enc_out inside each
+    # decode step (it is small: 1500 frames) — no cache entry needed.
+    return cache
+
+
+def _layer_decode(cfg: ArchConfig, layer_idx, p: Params, x, pos, cache_slice,
+                  enc_out=None):
+    """x: (B, 1, D); cache_slice: this layer's cache entries."""
+    s = _res_scale(cfg)
+    new_cache = {}
+    positions = jnp.broadcast_to(jnp.asarray(pos).reshape(1, 1), (x.shape[0], 1))
+    if cfg.family == "ssm":
+        h, st = mamba2_decode_step(
+            p["ssm"], cfg, rmsnorm(x, p["ln1"], cfg.norm_eps),
+            {"conv": cache_slice["conv"], "ssm": cache_slice["ssm"]})
+        return x + s * h, {"conv": st["conv"], "ssm": st["ssm"]}
+
+    kv_keys = [k for k in ("k", "v", "k_scale", "v_scale") if k in cache_slice]
+    kv_cache = {k: cache_slice[k] for k in kv_keys}
+    xin = rmsnorm(x, p["ln1"], cfg.norm_eps)
+    if cfg.family == "hybrid":
+        a, kv = attention(p["attn"], cfg, xin, positions,
+                          window=cfg.sliding_window,
+                          cache=kv_cache,
+                          cache_pos=pos)
+        m, st = mamba2_decode_step(
+            p["ssm"], cfg, xin,
+            {"conv": cache_slice["conv"], "ssm": cache_slice["ssm"]})
+        h = 0.5 * (rmsnorm(a, p["attn_norm"], cfg.norm_eps)
+                   + rmsnorm(m, p["ssm_norm"], cfg.norm_eps))
+        x = x + s * h
+        new_cache.update(kv)
+        new_cache.update({"conv": st["conv"], "ssm": st["ssm"]})
+    else:
+        a, kv = attention(p["attn"], cfg, xin, positions,
+                          window=cfg.sliding_window,
+                          cache=kv_cache,
+                          cache_pos=pos)
+        x = x + s * a
+        new_cache.update(kv)
+    if cfg.family == "encdec" and enc_out is not None:
+        xx = rmsnorm(x, p["ln_x"], cfg.norm_eps)
+        c, _ = attention(p["xattn"], cfg, xx, positions, mode="cross",
+                         kv_src=enc_out)
+        x = x + s * c
+    f_in = rmsnorm(x, p["ln2"], cfg.norm_eps)
+    f = moe(p["ffn"], cfg, f_in) if cfg.family == "moe" else mlp(p["ffn"], cfg, f_in)
+    return x + s * f, new_cache
+
+
+def decode_step(cfg: ArchConfig, params: Params, token, pos, cache: Params,
+                enc_out=None):
+    """token: (B,) int32; pos: scalar int32. Returns (logits (B, V), cache)."""
+    B = token.shape[0]
+    x = params["embed"][token][:, None, :] * cfg.scale_emb
+    if cfg.family == "encdec":
+        x = x + params["dec_pos"][pos][None, None]
+
+    def body(carry, inp):
+        idx, lp, csl = inp
+        y, nc = _layer_decode(cfg, idx, lp, carry, pos, csl, enc_out)
+        return y, nc
+
+    idxs = jnp.arange(cfg.n_layers)
+    x, new_cache = jax.lax.scan(body, x, (idxs, params["layers"], cache))
+    x = rmsnorm(x, params["ln_f"], cfg.norm_eps)
+    w_out = params["embed"].T if cfg.tie_embeddings else params["unembed"]
+    logits = (x[:, 0] @ w_out) / cfg.logit_scale
+    return logits, new_cache

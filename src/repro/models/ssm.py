@@ -1,0 +1,174 @@
+"""Mamba2 — SSD (state-space duality) blocks, chunked scan (arXiv:2405.21060).
+
+TPU adaptation notes (DESIGN.md §4): the CUDA SSD kernel's warp-level
+tiling does not transfer; we keep the *algorithm* (chunked quadratic
+intra-chunk term + O(S) inter-chunk state recurrence) expressed as batched
+einsums + one `jax.lax.scan` over chunks — XLA maps the einsums onto the MXU
+and the scan carries the (H, N, P) state through HBM-resident buffers.
+
+Decode maintains O(1) state: (B, H, N, P) SSM state + (B, conv-1, C) conv tail.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ArchConfig
+from .layers import Params, dense_init, rmsnorm
+
+
+def init_mamba2(key, cfg: ArchConfig) -> Params:
+    ks = jax.random.split(key, 8)
+    D, DI, N, H = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    C = DI + 2 * N  # conv acts on x, B, C streams
+    dt = jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+    return {
+        # projections: [z | x | B | C | dt]
+        "in_proj": dense_init(ks[0], (D, 2 * DI + 2 * N + H), dtype=dt),
+        "conv_w": dense_init(ks[1], (cfg.ssm_conv, C), scale=0.5, dtype=dt),
+        "conv_b": jnp.zeros((C,), dt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "D": jnp.ones((H,), jnp.float32),
+        "dt_bias": jnp.zeros((H,), jnp.float32),
+        "norm": jnp.ones((DI,), jnp.float32),
+        "out_proj": dense_init(ks[2], (DI, D), dtype=dt),
+    }
+
+
+def _split_proj(p, cfg: ArchConfig, u):
+    DI, N, H = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = u @ p["in_proj"]
+    z, xbc, dt = jnp.split(zxbcdt, [DI, 2 * DI + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(p, cfg: ArchConfig, xbc, conv_state=None):
+    """Depthwise causal conv over the sequence axis.
+
+    xbc: (B, S, C). conv_state: (B, conv-1, C) tail of previous tokens.
+    Returns (out, new_conv_state)."""
+    K = cfg.ssm_conv
+    B, S, C = xbc.shape
+    if conv_state is None:
+        pad = jnp.zeros((B, K - 1, C), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    full = jnp.concatenate([pad, xbc], axis=1)  # (B, S+K-1, C)
+    out = jnp.zeros_like(xbc)
+    for i in range(K):
+        out = out + full[:, i : i + S, :] * p["conv_w"][i]
+    out = jax.nn.silu(out + p["conv_b"])
+    return out, full[:, -(K - 1) :, :]
+
+
+def _segsum(x):
+    """x: (..., Q) -> (..., Q, Q) lower-tri cumulative sums: L[i,j] = sum_{j<t<=i} x_t."""
+    Q = x.shape[-1]
+    c = jnp.cumsum(x, axis=-1)
+    diff = c[..., :, None] - c[..., None, :]
+    mask = jnp.tril(jnp.ones((Q, Q), bool))
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(cfg: ArchConfig, xh, Bm, Cm, dt, A, initial_state=None):
+    """Chunked SSD scan.
+
+    xh: (B, S, H, P); Bm, Cm: (B, S, N); dt: (B, S, H) (post-softplus);
+    A: (H,) negative decay rates. Returns (y (B,S,H,P), final_state (B,H,N,P)).
+    """
+    Bsz, S, H, P = xh.shape
+    N = Bm.shape[-1]
+    Q = min(cfg.ssm_chunk, S)
+    if S % Q:  # pad tail (causal: outputs before the pad are unaffected;
+        # the returned final state assumes chunk-aligned prefill lengths)
+        pad = Q - S % Q
+        zf = lambda a: jnp.pad(a, [(0, 0), (0, pad)] + [(0, 0)] * (a.ndim - 2))
+        y, st = ssd_chunked(cfg, zf(xh), zf(Bm), zf(Cm), zf(dt), A, initial_state)
+        return y[:, :S], st
+    nc = S // Q
+
+    xc = xh.reshape(Bsz, nc, Q, H, P)
+    Bc = Bm.reshape(Bsz, nc, Q, N)
+    Cc = Cm.reshape(Bsz, nc, Q, N)
+    dtc = dt.reshape(Bsz, nc, Q, H)
+    dA = dtc * A  # (B, nc, Q, H) negative
+
+    # ---- intra-chunk (quadratic within Q) ---------------------------------
+    L = jnp.exp(_segsum(jnp.moveaxis(dA, -1, -2)))  # (B, nc, H, Q, Q)
+    scores = jnp.einsum("bcqn,bckn->bcqk", Cc, Bc)[:, :, None] * L
+    y_intra = jnp.einsum("bchqk,bckh,bckhp->bcqhp", scores, dtc, xc)
+
+    # ---- chunk states + inter-chunk recurrence ---------------------------
+    dA_cum = jnp.cumsum(dA, axis=2)                     # (B, nc, Q, H)
+    decay_to_end = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # (B, nc, Q, H)
+    states = jnp.einsum("bcqn,bcqh,bcqhp->bchnp",
+                        Bc, dtc * decay_to_end, xc)     # (B, nc, H, N, P)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])          # (B, nc, H)
+
+    if initial_state is None:
+        initial_state = jnp.zeros((Bsz, H, N, P), jnp.float32)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None] + st
+        return new, carry  # emit state *entering* the chunk
+
+    xs = (jnp.moveaxis(states, 1, 0).astype(jnp.float32),
+          jnp.moveaxis(chunk_decay, 1, 0).astype(jnp.float32))
+    final, entering = jax.lax.scan(step, initial_state.astype(jnp.float32), xs)
+    entering = jnp.moveaxis(entering, 0, 1)             # (B, nc, H, N, P)
+
+    decay_from_start = jnp.exp(dA_cum)                  # (B, nc, Q, H)
+    y_inter = jnp.einsum("bcqn,bcqh,bchnp->bcqhp",
+                         Cc, decay_from_start, entering.astype(Cc.dtype))
+    y = (y_intra + y_inter.astype(y_intra.dtype)).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def mamba2_forward(p: Params, cfg: ArchConfig, u, state=None):
+    """u: (B, S, D). state: None (train/prefill) or
+    {'conv': (B, K-1, C), 'ssm': (B, H, N, P)} for chunk-continuation.
+    Returns (out, new_state)."""
+    B, S, D = u.shape
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    z, xbc, dtr = _split_proj(p, cfg, u)
+    conv_in = state["conv"] if state else None
+    xbc, conv_tail = _causal_conv(p, cfg, xbc, conv_in)
+    xh, Bm, Cm = jnp.split(xbc, [DI, DI + N], axis=-1)
+    xh = xh.reshape(B, S, H, P)
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    ssm_in = state["ssm"] if state else None
+    y, final = ssd_chunked(cfg, xh, Bm, Cm, dt, A, ssm_in)
+    y = y + xh * p["D"][None, None, :, None].astype(xh.dtype)
+    y = y.reshape(B, S, DI)
+    y = rmsnorm(y * jax.nn.silu(z.astype(y.dtype)), p["norm"], cfg.norm_eps)
+    out = (y.astype(u.dtype) @ p["out_proj"]).astype(u.dtype)
+    return out, {"conv": conv_tail, "ssm": final}
+
+
+def mamba2_decode_step(p: Params, cfg: ArchConfig, u, state):
+    """Single-token decode: u (B, 1, D), O(1) state update."""
+    B, _, D = u.shape
+    DI, N, H, P = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_headdim
+    K = cfg.ssm_conv
+    z, xbc, dtr = _split_proj(p, cfg, u)
+    # conv: state holds the last K-1 inputs
+    full = jnp.concatenate([state["conv"].astype(xbc.dtype), xbc], axis=1)  # (B, K, C)
+    conv_out = jnp.einsum("bkc,kc->bc", full, p["conv_w"]) + p["conv_b"]
+    conv_out = jax.nn.silu(conv_out)[:, None, :]
+    new_conv = full[:, 1:, :]
+    xh, Bm, Cm = jnp.split(conv_out, [DI, DI + N], axis=-1)
+    xh = xh.reshape(B, H, P)
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])  # (B, H)
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)  # (B, H)
+    st = state["ssm"]
+    st = st * decay[..., None, None] + jnp.einsum(
+        "bn,bh,bhp->bhnp", Bm[:, 0].astype(jnp.float32), dt, xh.astype(jnp.float32))
+    y = jnp.einsum("bn,bhnp->bhp", Cm[:, 0].astype(jnp.float32), st)
+    y = y.astype(u.dtype) + xh * p["D"][None, :, None].astype(xh.dtype)
+    y = y.reshape(B, 1, DI)
+    y = rmsnorm(y * jax.nn.silu(z.astype(y.dtype)), p["norm"], cfg.norm_eps)
+    return (y.astype(u.dtype) @ p["out_proj"]).astype(u.dtype), {
+        "conv": new_conv, "ssm": st}

@@ -1,0 +1,5 @@
+from .optimizers import adamw, adafactor, make_optimizer, Optimizer
+from .schedules import cosine_schedule, wsd_schedule, make_schedule
+
+__all__ = ["adamw", "adafactor", "make_optimizer", "Optimizer",
+           "cosine_schedule", "wsd_schedule", "make_schedule"]

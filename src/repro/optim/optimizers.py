@@ -1,0 +1,135 @@
+"""Optimizers as pure (init, update) pairs over param pytrees (no optax).
+
+* adamw     — fp32 m/v states, decoupled weight decay.
+* adafactor — factored second moment (row/col statistics for >=2D params),
+              no first moment by default: ~1 byte-equivalent of state per
+              param element. Required for kimi-k2 on the 512-chip HBM
+              envelope (DESIGN.md §5).
+
+Both support global-norm clipping and an `lr(step)` schedule callable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+
+Params = Any
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Params], Params]
+    update: Callable[[Params, Params, Params, jnp.ndarray], tuple[Params, Params]]
+    # update(grads, state, params, step) -> (new_params, new_state)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-9))
+    return jax.tree.map(lambda g: (g.astype(jnp.float32) * scale), grads), norm
+
+
+def adamw(
+    lr: Callable,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    def init(params):
+        zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {"m": jax.tree.map(zeros, params), "v": jax.tree.map(zeros, params)}
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        lr_t = lr(step)
+        bc1 = 1 - b1**t
+        bc2 = 1 - b2**t
+
+        def upd(g, m, v, p):
+            m = b1 * m + (1 - b1) * g
+            v = b2 * v + (1 - b2) * g * g
+            upd_ = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            new_p = p.astype(jnp.float32) - lr_t * (upd_ + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), m, v
+
+        out = jax.tree.map(upd, grads, state["m"], state["v"], params)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_m = jax.tree.map(lambda o: o[1], out, is_leaf=lambda x: isinstance(x, tuple))
+        new_v = jax.tree.map(lambda o: o[2], out, is_leaf=lambda x: isinstance(x, tuple))
+        return new_params, {"m": new_m, "v": new_v}
+
+    return Optimizer(init, update)
+
+
+def adafactor(
+    lr: Callable,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    decay: float = 0.8,
+    weight_decay: float = 0.0,
+    clip_norm: float = 1.0,
+) -> Optimizer:
+    """Factored RMS optimizer (Shazeer & Stern 2018), momentum-free."""
+
+    def _factored(p) -> bool:
+        return p.ndim >= 2
+
+    def init(params):
+        def st(p):
+            if _factored(p):
+                return {
+                    "r": jnp.zeros(p.shape[:-1], jnp.float32),      # row stats
+                    "c": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return jax.tree.map(st, params, is_leaf=lambda x: hasattr(x, "shape"))
+
+    def update(grads, state, params, step):
+        grads, _ = clip_by_global_norm(grads, clip_norm)
+        t = step.astype(jnp.float32) + 1.0
+        beta = 1.0 - t ** (-decay)
+        lr_t = lr(step)
+
+        def upd(g, s, p):
+            g2 = g * g + eps
+            if _factored(p):
+                r = beta * s["r"] + (1 - beta) * jnp.mean(g2, axis=-1)
+                c = beta * s["c"] + (1 - beta) * jnp.mean(g2, axis=-2)
+                rc = r / jnp.maximum(jnp.mean(r, axis=-1, keepdims=True), eps)
+                vhat = rc[..., None] * c[..., None, :]
+                new_s = {"r": r, "c": c}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                vhat = v
+                new_s = {"v": v}
+            u = g / jnp.sqrt(vhat + eps)
+            # update clipping (RMS)
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps)
+            u = u / jnp.maximum(1.0, rms_u / clip_threshold)
+            new_p = p.astype(jnp.float32) - lr_t * (u + weight_decay * p.astype(jnp.float32))
+            return new_p.astype(p.dtype), new_s
+
+        out = jax.tree.map(upd, grads, state, params,
+                           is_leaf=lambda x: isinstance(x, dict) and ("r" in x or "v" in x))
+        is_pair = lambda x: isinstance(x, tuple)
+        new_params = jax.tree.map(lambda o: o[0], out, is_leaf=is_pair)
+        new_state = jax.tree.map(lambda o: o[1], out, is_leaf=is_pair)
+        return new_params, new_state
+
+    return Optimizer(init, update)
+
+
+def make_optimizer(kind: str, lr: Callable, **kw) -> Optimizer:
+    return {"adamw": adamw, "adafactor": adafactor}[kind](lr, **kw)

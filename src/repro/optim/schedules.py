@@ -1,0 +1,37 @@
+"""LR schedules: cosine and WSD (warmup-stable-decay, minicpm arXiv:2404.06395)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def cosine_schedule(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return lr
+
+
+def wsd_schedule(peak_lr: float, warmup: int, stable: int, decay: int,
+                 floor: float = 0.01):
+    """Warmup -> flat -> exponential-ish (linear here) decay to floor*peak."""
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup, 1)
+        t = jnp.clip((step - warmup - stable) / jnp.maximum(decay, 1), 0.0, 1.0)
+        dec = peak_lr * (1 - (1 - floor) * t)
+        out = jnp.where(step < warmup, warm, peak_lr)
+        return jnp.where(step > warmup + stable, dec, out)
+
+    return lr
+
+
+def make_schedule(kind: str, peak_lr: float, total: int, warmup: int | None = None):
+    warmup = warmup if warmup is not None else max(10, total // 100)
+    if kind == "wsd":
+        stable = int(0.8 * (total - warmup))
+        return wsd_schedule(peak_lr, warmup, stable, total - warmup - stable)
+    return cosine_schedule(peak_lr, warmup, total)

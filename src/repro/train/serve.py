@@ -1,0 +1,40 @@
+"""Serving steps: prefill (full-sequence, returns logits + populated KV
+cache) and decode (one token per request against the cache)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ArchConfig
+
+
+def make_prefill_step(cfg: ArchConfig):
+    def prefill(params, batch):
+        return M.forward(cfg, params, batch)
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig):
+    def decode(params, token, pos, cache, enc_out=None):
+        return M.decode_step(cfg, params, token, pos, cache, enc_out)
+
+    return decode
+
+
+def greedy_generate(cfg: ArchConfig, params, prompt: jnp.ndarray, steps: int,
+                    max_len: int = 256):
+    """Simple batched greedy generation driver (used by the serving example)."""
+    B, S = prompt.shape
+    cache = M.init_cache(cfg, B, max_len)
+    tok = prompt[:, 0]
+    out = [tok]
+    for t in range(S + steps - 1):
+        logits, cache = M.decode_step(cfg, params, tok, jnp.int32(t), cache)
+        if t + 1 < S:
+            tok = prompt[:, t + 1]  # teacher-forced prompt consumption
+        else:
+            tok = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        out.append(tok)
+    return jnp.stack(out, axis=1)

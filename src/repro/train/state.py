@@ -1,0 +1,38 @@
+"""TrainState pytree + factory."""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from ..models import model as M
+from ..models.config import ArchConfig
+from ..optim import make_optimizer, make_schedule
+from ..optim.optimizers import Optimizer
+
+
+class TrainState(NamedTuple):
+    step: jnp.ndarray
+    params: Any
+    opt_state: Any
+
+
+def make_train_setup(cfg: ArchConfig, total_steps: int = 10000,
+                     peak_lr: float = 3e-4) -> tuple[Optimizer, Any]:
+    sched_kind = "wsd" if cfg.name.startswith("minicpm") else "cosine"
+    lr = make_schedule(sched_kind, peak_lr, total_steps)
+    opt = make_optimizer(cfg.optimizer, lr)
+    return opt, lr
+
+
+def init_state(cfg: ArchConfig, key, opt: Optimizer) -> TrainState:
+    params = M.init_params(cfg, key)
+    return TrainState(jnp.zeros((), jnp.int32), params, opt.init(params))
+
+
+def abstract_state(cfg: ArchConfig, opt: Optimizer) -> TrainState:
+    """ShapeDtypeStruct state for dry-run lowering (no allocation)."""
+    params = jax.eval_shape(lambda: M.init_params(cfg, jax.random.PRNGKey(0)))
+    opt_state = jax.eval_shape(opt.init, params)
+    return TrainState(jax.ShapeDtypeStruct((), jnp.int32), params, opt_state)

@@ -1,0 +1,181 @@
+"""Per-architecture smoke tests: reduced same-family config, one forward +
+one train step on CPU, asserting output shapes and no NaNs; decode-vs-forward
+consistency for every family's serve path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, all_configs, cell_applicable, get_config, get_shape
+from repro.models import model as M
+
+KEY = jax.random.PRNGKey(0)
+ARCHS = [a for a in ARCH_IDS if a != "paper_rs"]
+
+
+def make_batch(scfg, B=2, S=32):
+    batch = {
+        "tokens": jax.random.randint(KEY, (B, S), 0, scfg.vocab),
+        "labels": jax.random.randint(KEY, (B, S), 0, scfg.vocab),
+    }
+    if scfg.family == "vlm":
+        batch["vision_embeds"] = jax.random.normal(
+            KEY, (B, scfg.n_patches, scfg.d_model), jnp.float32)
+    if scfg.family == "encdec":
+        batch["frames"] = jax.random.normal(
+            KEY, (B, scfg.n_frames, scfg.d_model), jnp.float32)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_shapes(arch):
+    scfg = get_config(arch).smoke()
+    params = M.init_params(scfg, KEY)
+    batch = make_batch(scfg)
+    logits = M.forward(scfg, params, batch)
+    assert logits.shape == (2, 32, scfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    loss = M.loss_fn(scfg, params, batch)
+    assert np.isfinite(float(loss))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_train_step(arch):
+    """One SGD step: grads exist for every leaf and loss is finite."""
+    scfg = get_config(arch).smoke()
+    params = M.init_params(scfg, KEY)
+    batch = make_batch(scfg)
+    loss, grads = jax.value_and_grad(lambda p: M.loss_fn(scfg, p, batch))(params)
+    assert np.isfinite(float(loss))
+    flat = jax.tree.leaves(grads)
+    assert all(not np.any(np.isnan(np.asarray(g, np.float32))) for g in flat)
+    # apply and verify loss moves
+    new = jax.tree.map(lambda p, g: p - 0.5 * g.astype(p.dtype), params, grads)
+    loss2 = M.loss_fn(scfg, new, batch)
+    assert np.isfinite(float(loss2))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_decode_step(arch):
+    scfg = get_config(arch).smoke()
+    params = M.init_params(scfg, KEY)
+    B = 2
+    batch = make_batch(scfg, B=B)
+    enc_out = None
+    if scfg.family == "encdec":
+        enc_out = M.encode_frames(scfg, params, batch["frames"].astype(jnp.bfloat16))
+    cache = M.init_cache(scfg, B, 64, enc_out)
+    logits, cache2 = M.decode_step(scfg, params, batch["tokens"][:, 0],
+                                   jnp.int32(0), cache, enc_out)
+    assert logits.shape == (B, scfg.vocab)
+    assert not np.any(np.isnan(np.asarray(logits, np.float32)))
+    # cache actually updated
+    changed = jax.tree.map(lambda a, b: bool(np.any(np.asarray(a) != np.asarray(b))),
+                           cache, cache2)
+    assert any(jax.tree.leaves(changed))
+
+
+@pytest.mark.parametrize("arch", ["qwen3_1_7b", "mamba2_780m", "hymba_1_5b",
+                                  "phi3_5_moe_42b_a6_6b", "whisper_large_v3"])
+def test_decode_matches_forward(arch):
+    """Stepwise decode with cache reproduces the full forward logits."""
+    scfg = get_config(arch).smoke()
+    params = M.init_params(scfg, KEY)
+    B, S = 2, 8
+    batch = make_batch(scfg, B=B, S=S)
+    enc_out = None
+    fwd_batch = {"tokens": batch["tokens"]}
+    if scfg.family == "encdec":
+        enc_out = M.encode_frames(scfg, params, batch["frames"].astype(jnp.bfloat16))
+        fwd_batch["frames"] = batch["frames"]
+    cache = M.init_cache(scfg, B, 64, enc_out)
+    outs = []
+    for t in range(S):
+        lg, cache = M.decode_step(scfg, params, batch["tokens"][:, t],
+                                  jnp.int32(t), cache, enc_out)
+        outs.append(lg)
+    stepwise = jnp.stack(outs, 1).astype(jnp.float32)
+    full = M.forward(scfg, params, fwd_batch).astype(jnp.float32)
+    np.testing.assert_allclose(np.asarray(stepwise), np.asarray(full),
+                               atol=0.15, rtol=0.05)
+
+
+def test_cell_applicability_matrix():
+    """40 cells: long_500k runs only for sub-quadratic archs (DESIGN.md §5)."""
+    cfgs = all_configs()
+    runnable = 0
+    for arch, cfg in cfgs.items():
+        for shape in ("train_4k", "prefill_32k", "decode_32k", "long_500k"):
+            ok, why = cell_applicable(cfg, get_shape(shape))
+            if shape == "long_500k":
+                assert ok == (arch in ("mamba2_780m", "hymba_1_5b")), (arch, why)
+            else:
+                assert ok
+            runnable += ok
+    assert runnable == 32  # 30 + 2 long_500k
+
+
+def test_exact_assigned_configs():
+    """The full configs match the assignment table exactly."""
+    c = get_config("qwen3_14b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab) == \
+        (40, 5120, 40, 8, 17408, 151936) and c.qk_norm
+    c = get_config("kimi_k2_1t_a32b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.n_experts, c.top_k) == (61, 7168, 64, 8, 2048, 163840, 384, 8)
+    c = get_config("mamba2_780m")
+    assert (c.n_layers, c.d_model, c.vocab, c.ssm_state) == (48, 1536, 50280, 128)
+    c = get_config("qwen1_5_32b")
+    assert c.qkv_bias and c.n_layers == 64 and c.d_ff == 27392
+    c = get_config("hymba_1_5b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.n_kv_heads, c.d_ff, c.vocab,
+            c.ssm_state) == (32, 1600, 25, 5, 5504, 32001, 16)
+    c = get_config("minicpm_2b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff, c.vocab) == \
+        (40, 2304, 36, 5760, 122753)
+    c = get_config("whisper_large_v3")
+    assert c.family == "encdec" and c.d_model == 1280 and c.vocab == 51866
+    c = get_config("llava_next_mistral_7b")
+    assert c.family == "vlm" and c.d_model == 4096 and c.d_ff == 14336
+    c = get_config("phi3_5_moe_42b_a6_6b")
+    assert (c.n_experts, c.top_k, c.d_ff) == (16, 2, 6400)
+    c = get_config("qwen3_1_7b")
+    assert (c.n_layers, c.d_model, c.n_heads, c.d_ff) == (28, 2048, 16, 6144)
+
+
+def test_int8_kv_cache_decode_matches_fp():
+    """quantize_kv: greedy decode agrees with the bf16-cache path."""
+    import dataclasses
+
+    scfg = dataclasses.replace(get_config("qwen3_1_7b").smoke(), dtype="float32")
+    scfgq = dataclasses.replace(scfg, quantize_kv=True)
+    params = M.init_params(scfg, KEY)
+    B, S = 2, 10
+    toks = jax.random.randint(KEY, (B, S), 0, scfg.vocab)
+    cf, cq = M.init_cache(scfg, B, 32), M.init_cache(scfgq, B, 32)
+    assert cq["k"].dtype == jnp.int8 and "k_scale" in cq
+    for t in range(S):
+        lf, cf = M.decode_step(scfg, params, toks[:, t], jnp.int32(t), cf)
+        lq, cq = M.decode_step(scfgq, params, toks[:, t], jnp.int32(t), cq)
+        assert float(jnp.max(jnp.abs(lf - lq))) < 0.05
+        assert jnp.array_equal(jnp.argmax(lf, -1), jnp.argmax(lq, -1))
+
+
+def test_ring_buffer_swa_cache_matches_forward():
+    """Sliding-window ring cache (L == window) decode == full forward."""
+    import dataclasses
+
+    scfg = dataclasses.replace(get_config("hymba_1_5b").smoke(),
+                               sliding_window=8, dtype="float32")
+    params = M.init_params(scfg, KEY)
+    B, S = 2, 24
+    toks = jax.random.randint(KEY, (B, S), 0, scfg.vocab)
+    cache = M.init_cache(scfg, B, 64)
+    assert cache["k"].shape[2] == 8  # ring length == window
+    outs = []
+    for t in range(S):
+        lg, cache = M.decode_step(scfg, params, toks[:, t], jnp.int32(t), cache)
+        outs.append(lg)
+    sl = jnp.stack(outs, 1)
+    fl = M.forward(scfg, params, {"tokens": toks})
+    np.testing.assert_allclose(np.asarray(sl), np.asarray(fl), atol=2e-4)

@@ -1,0 +1,71 @@
+"""Broadcast/reduce primitives (Defs. 2-3, App. A) and structured points."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FERMAT, RoundNetwork
+from repro.core.collectives import broadcast, cost_broadcast, reduce
+from repro.core.matrices import StructuredPoints, digit_reverse, digits
+
+
+@pytest.mark.parametrize("N,p", [(2, 1), (5, 1), (16, 1), (9, 2), (27, 2), (7, 3)])
+def test_broadcast_reaches_all_with_optimal_rounds(N, p):
+    f = FERMAT
+    val = f.arr(np.arange(4) + 7)
+    out = {}
+    net = RoundNetwork(N, p)
+    net.run(broadcast(f, val, list(range(N)), p, out))
+    assert all(np.array_equal(out[i], val) for i in range(N))
+    c1, c2 = cost_broadcast(N, p, W=4)
+    assert net.C1 == c1  # (p+1)-nomial optimum
+    assert net.C2 == c2
+
+
+@pytest.mark.parametrize("N,p", [(2, 1), (8, 1), (11, 1), (9, 2), (10, 3)])
+def test_reduce_sums_to_root(N, p):
+    f = FERMAT
+    rng = np.random.default_rng(N)
+    vals = {i: f.rand(3, rng) for i in range(N)}
+    out = {}
+    net = RoundNetwork(N, p)
+    net.run(reduce(f, vals, list(range(N)), p, out))
+    expected = np.zeros(3, np.int64)
+    for v in vals.values():
+        expected = f.add(expected, v)
+    assert np.array_equal(out[0], expected)
+    assert net.C1 == cost_broadcast(N, p)[0]  # dual of broadcast
+
+
+def test_reduce_on_arbitrary_proc_ids():
+    """Framework uses reduce over non-contiguous global processor ids."""
+    f = FERMAT
+    procs = [12, 3, 44, 7]
+    vals = {g: f.arr([g]) for g in procs}
+    out = {}
+    RoundNetwork(64, 1).run(reduce(f, vals, procs, 1, out))
+    assert out[12] == (12 + 3 + 44 + 7) % f.q
+
+
+@given(k=st.integers(0, 3**5 - 1))
+@settings(max_examples=50, deadline=None)
+def test_digit_reverse_involution(k):
+    assert digit_reverse(digit_reverse(k, 3, 5), 3, 5) == k
+    ds = digits(k, 3, 5)
+    assert sum(d * 3**i for i, d in enumerate(ds)) == k
+
+
+@pytest.mark.parametrize("K,P", [(16, 2), (24, 2), (64, 4), (48, 2)])
+def test_structured_points_distinct_and_reconstructible(K, P):
+    sp = StructuredPoints.build(FERMAT, K, P=P)
+    pts = sp.points()
+    assert len(set(pts.tolist())) == K  # footnote 3: all distinct
+    assert sp.M * sp.Z == K
+    # zeta is a primitive Z-th root
+    if sp.Z > 1:
+        assert pow(sp.zeta, sp.Z, FERMAT.q) == 1
+        assert pow(sp.zeta, sp.Z // 2, FERMAT.q) != 1
+
+
+def test_structured_points_max_h_cap():
+    sp = StructuredPoints.build(FERMAT, 64, P=2, max_h=2)
+    assert sp.Z == 4 and sp.M == 16

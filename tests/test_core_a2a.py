@@ -1,0 +1,173 @@
+"""All-to-all encode algorithms vs direct matmul oracles + cost theorems."""
+import math
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    FERMAT,
+    Field,
+    RoundNetwork,
+    StructuredPoints,
+    cost_dft,
+    cost_draw_loose,
+    cost_universal,
+    dft_a2a,
+    draw_loose,
+    permuted_dft_matrix,
+    universal_a2a,
+    vandermonde,
+)
+from repro.core.prepare_shoot import phase_split
+
+RNG = np.random.default_rng(42)
+
+
+# ---------------- universal prepare-and-shoot -------------------------------
+
+@pytest.mark.parametrize("p", [1, 2, 3, 4])
+@pytest.mark.parametrize("K", [2, 3, 4, 5, 8, 9, 13, 16, 27, 40, 64, 65, 100])
+def test_universal_correct_and_c1_optimal(K, p):
+    f = FERMAT
+    C = f.rand((K, K), RNG)
+    x = f.rand(K, RNG)
+    net = RoundNetwork(K, p)
+    y = universal_a2a(f, C, x, p=p, net=net)
+    assert np.array_equal(y, f.matmul(x[None, :], C)[0])
+    c1, c2 = cost_universal(K, p)
+    assert net.C1 == c1  # C1-optimal (Lemma 1)
+    # Thm. 3 C2 is exact for K = (p+1)^L and an upper bound otherwise
+    # (partial trees carry smaller messages)
+    assert net.C2 <= c2
+    if K == (p + 1) ** c1:
+        assert net.C2 == c2
+
+
+def test_universal_vector_payload():
+    f = FERMAT
+    K, W = 65, 5
+    C = f.rand((K, K), RNG)
+    x = f.rand((K, W), RNG)
+    y = universal_a2a(f, C, x, p=2)
+    assert np.array_equal(y, f.matmul(C.T, x))
+
+
+def test_universal_other_field():
+    f = Field(12289)
+    K = 31
+    C = f.rand((K, K), RNG)
+    x = f.rand(K, RNG)
+    assert np.array_equal(universal_a2a(f, C, x, p=1), f.matmul(x[None, :], C)[0])
+
+
+@given(K=st.integers(2, 60), p=st.integers(1, 4), seed=st.integers(0, 2**31))
+@settings(max_examples=40, deadline=None)
+def test_universal_property(K, p, seed):
+    """Property: prepare-and-shoot computes x*C for random K, p, C, x."""
+    f = FERMAT
+    rng = np.random.default_rng(seed)
+    C = f.rand((K, K), rng)
+    x = f.rand(K, rng)
+    assert np.array_equal(universal_a2a(f, C, x, p=p), f.matmul(x[None, :], C)[0])
+
+
+def test_c2_lower_bound_respected():
+    """Thm. 3 C2 is within sqrt(2) of the Lemma 2 lower bound (Remark 7)."""
+    from repro.core.cost_model import lower_bound_c2
+
+    for p in (1, 2):
+        for L in (4, 6, 8):
+            K = (p + 1) ** L
+            _, c2 = cost_universal(K, p)
+            lb = lower_bound_c2(K, p)
+            assert c2 >= lb - 1
+            assert c2 <= math.sqrt(2) * math.sqrt(2 * K) / p + 2 * (p + 1)
+
+
+def test_phase_split_invariants():
+    for p in (1, 2, 3):
+        for K in range(2, 300):
+            L, T_p, T_s, m = phase_split(K, p)
+            assert T_p + T_s == L
+            assert (p + 1) ** L >= K > (p + 1) ** (L - 1)
+            assert m == (p + 1) ** T_p
+
+
+# ---------------- DFT-specific (Sec. V-A) ----------------------------------
+
+@pytest.mark.parametrize("K,P", [(4, 2), (8, 2), (16, 2), (16, 4), (64, 4), (256, 16)])
+def test_dft_a2a_vs_matrix(K, P):
+    f = FERMAT
+    x = f.rand(K, RNG)
+    out = {}
+    net = RoundNetwork(K, 1)
+    net.run(dft_a2a(f, {k: x[k] for k in range(K)}, list(range(K)), 1, P, out))
+    y = np.stack([out[k] for k in range(K)])
+    D = permuted_dft_matrix(f, K, P)
+    assert np.array_equal(y, f.matmul(x[None, :], D)[0])
+    c1, c2 = cost_dft(K, P, 1)
+    assert (net.C1, net.C2) == (c1, c2)
+
+
+def test_dft_radix3_other_field():
+    """Radix-3 DFT needs 3^H | q-1: use q=487 (486 = 2*3^5)."""
+    f = Field(487)
+    K, P = 81, 3
+    x = f.rand(K, RNG)
+    out = {}
+    net = RoundNetwork(K, 2)
+    net.run(dft_a2a(f, {k: x[k] for k in range(K)}, list(range(K)), 2, P, out))
+    y = np.stack([out[k] for k in range(K)])
+    assert np.array_equal(y, f.matmul(x[None, :], permuted_dft_matrix(f, K, P))[0])
+    # Cor. 1: P = p+1 -> strictly optimal C1 = C2 = H = 4
+    assert net.C1 == net.C2 == 4
+
+
+def test_dft_inverse_roundtrip():
+    f = FERMAT
+    K, P = 64, 2
+    x = f.rand(K, RNG)
+    out, back = {}, {}
+    RoundNetwork(K, 1).run(dft_a2a(f, {k: x[k] for k in range(K)}, list(range(K)), 1, P, out))
+    RoundNetwork(K, 1).run(dft_a2a(f, out, list(range(K)), 1, P, back, inverse=True))
+    assert np.array_equal(np.stack([back[k] for k in range(K)]), x)
+
+
+# ---------------- draw-and-loose (Sec. V-B) --------------------------------
+
+@pytest.mark.parametrize("K,P", [(8, 2), (12, 2), (24, 2), (48, 2), (80, 4), (96, 2)])
+def test_draw_loose_vs_vandermonde(K, P):
+    f = FERMAT
+    sp = StructuredPoints.build(f, K, P=P)
+    V = vandermonde(f, sp.points())
+    x = f.rand(K, RNG)
+    out = {}
+    net = RoundNetwork(K, 1)
+    net.run(draw_loose(f, sp, {k: x[k] for k in range(K)}, list(range(K)), 1, out))
+    y = np.stack([out[k] for k in range(K)])
+    assert np.array_equal(y, f.matmul(x[None, :], V)[0])
+    assert (net.C1, net.C2) == cost_draw_loose(sp, 1)
+
+
+def test_draw_loose_inverse_roundtrip():
+    f = FERMAT
+    sp = StructuredPoints.build(f, 48, P=2)
+    x = f.rand((48, 3), RNG)
+    mid, back = {}, {}
+    RoundNetwork(48, 1).run(draw_loose(f, sp, {k: x[k] for k in range(48)}, list(range(48)), 1, mid))
+    RoundNetwork(48, 1).run(draw_loose(f, sp, mid, list(range(48)), 1, back, inverse=True))
+    assert np.array_equal(np.stack([back[k] for k in range(48)]), x)
+
+
+def test_draw_loose_beats_universal_c2_at_scale():
+    """The point of Sec. V: C2 gain over universal grows with K (Remark 8)."""
+    f = FERMAT
+    for K in (256, 1024, 4096):
+        sp = StructuredPoints.build(f, K, P=2)
+        _, c2_vand = cost_draw_loose(sp, 1)
+        _, c2_univ = cost_universal(K, 1)
+        assert c2_vand < c2_univ
+    # at K=4096: universal ~ 2*sqrt(K) = 126; DFT-specific = log2 K = 12
+    assert cost_draw_loose(StructuredPoints.build(f, 4096, P=2), 1)[1] <= 12
+    assert cost_universal(4096, 1)[1] >= 120

@@ -1,0 +1,137 @@
+"""Field arithmetic: numpy oracle path, jnp Fermat uint32 path, packing."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.field import (
+    FERMAT,
+    FERMAT_Q,
+    Field,
+    bytes_to_symbols,
+    fermat_add,
+    fermat_matvec_cols,
+    fermat_mul,
+    fermat_reduce,
+    fermat_sub,
+    find_generator,
+    is_prime,
+    symbols_to_bytes,
+)
+
+
+def test_is_prime():
+    assert is_prime(2) and is_prime(65537) and is_prime(12289)
+    assert not is_prime(1) and not is_prime(65536) and not is_prime(12288)
+
+
+def test_generator_order():
+    for q in (5, 257, 12289, 65537):
+        g = find_generator(q)
+        seen = set()
+        x = 1
+        for _ in range(q - 1):
+            x = x * g % q
+            seen.add(x)
+        assert len(seen) == q - 1
+
+
+def test_field_basic_ops():
+    f = FERMAT
+    a = np.array([0, 1, 65535, 65536, 12345])
+    b = np.array([65536, 65536, 65536, 65536, 54321])
+    assert np.all(f.add(a, b) == (a.astype(object) + b) % f.q)
+    assert np.all(f.mul(a, b) == (a.astype(object) * b) % f.q)
+    inv = f.inv(np.array([1, 2, 65536]))
+    assert np.all(f.mul(np.array([1, 2, 65536]), inv) == 1)
+
+
+def test_pow_negative_and_zero():
+    f = Field(12289)
+    assert f.pow(np.int64(5), 0) == 1
+    x = np.int64(1234)
+    assert f.mul(f.pow(x, 5), f.pow(x, -5)) == 1
+
+
+def test_matmul_exact_vs_object():
+    rng = np.random.default_rng(0)
+    f = FERMAT
+    a = f.rand((17, 33), rng)
+    b = f.rand((33, 9), rng)
+    exact = (a.astype(object) @ b.astype(object)) % f.q
+    assert np.array_equal(f.matmul(a, b), exact.astype(np.int64))
+
+
+def test_poly_eval_horner():
+    f = FERMAT
+    coeffs = np.array([3, 0, 2, 7])  # 3 + 2x^2 + 7x^3
+    x = np.array([0, 1, 5])
+    expected = (3 + 2 * x.astype(object) ** 2 + 7 * x.astype(object) ** 3) % f.q
+    assert np.array_equal(f.poly_eval(coeffs, x), expected.astype(np.int64))
+
+
+def test_root_of_unity():
+    f = FERMAT
+    for order in (2, 4, 256, 65536):
+        w = f.root_of_unity(order)
+        assert pow(w, order, f.q) == 1
+        assert pow(w, order // 2, f.q) != 1
+    with pytest.raises(ValueError):
+        f.root_of_unity(3)  # 3 does not divide 2^16
+
+
+# ---------------- jnp uint32 Fermat path -----------------------------------
+
+def test_fermat_reduce_full_range_samples():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(1)
+    xs = np.concatenate(
+        [rng.integers(0, 1 << 32, 20000, dtype=np.uint64).astype(np.uint32),
+         np.array([0, 1, 65536, 65537, 0xFFFFFFFF, 0xFFFF0000], np.uint32)]
+    )
+    got = np.asarray(fermat_reduce(jnp.asarray(xs)))
+    assert np.array_equal(got, xs.astype(np.uint64) % FERMAT_Q)
+
+
+@given(st.integers(0, FERMAT_Q - 1), st.integers(0, FERMAT_Q - 1))
+@settings(max_examples=300, deadline=None)
+def test_fermat_mul_matches_bigint(a, b):
+    import jax.numpy as jnp
+
+    got = int(fermat_mul(jnp.uint32(a), jnp.uint32(b)))
+    assert got == a * b % FERMAT_Q
+
+
+def test_fermat_mul_overflow_corner():
+    import jax.numpy as jnp
+
+    # 65536 == -1 (mod q): the only case where a*b overflows uint32
+    assert int(fermat_mul(jnp.uint32(65536), jnp.uint32(65536))) == 1
+    assert int(fermat_mul(jnp.uint32(65536), jnp.uint32(12345))) == (65536 * 12345) % FERMAT_Q
+    assert int(fermat_mul(jnp.uint32(65536), jnp.uint32(0))) == 0
+
+
+def test_fermat_add_sub_matvec():
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(2)
+    a = rng.integers(0, FERMAT_Q, (5, 64)).astype(np.uint32)
+    b = rng.integers(0, FERMAT_Q, (5, 64)).astype(np.uint32)
+    assert np.array_equal(np.asarray(fermat_add(jnp.asarray(a), jnp.asarray(b))),
+                          (a.astype(np.uint64) + b) % FERMAT_Q)
+    assert np.array_equal(np.asarray(fermat_sub(jnp.asarray(a), jnp.asarray(b))),
+                          (a.astype(np.int64) - b) % FERMAT_Q)
+    c = rng.integers(0, FERMAT_Q, (64, 16)).astype(np.uint32)
+    got = np.asarray(fermat_matvec_cols(jnp.asarray(a), jnp.asarray(c)))
+    exp = (a.astype(object) @ c.astype(object)) % FERMAT_Q
+    assert np.array_equal(got, exp.astype(np.uint32))
+
+
+@given(st.binary(min_size=0, max_size=257))
+@settings(max_examples=100, deadline=None)
+def test_byte_symbol_roundtrip(raw):
+    raw = np.frombuffer(raw, np.uint8)
+    sym = bytes_to_symbols(raw)
+    assert np.all(sym < 1 << 16)
+    back = symbols_to_bytes(sym, raw.size)
+    assert np.array_equal(back, raw)

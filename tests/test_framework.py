@@ -1,0 +1,114 @@
+"""Sec. III framework + Sec. VI RS method + Appendix B, end-to-end."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import FERMAT, RoundNetwork, decentralized_encode, nonsystematic_encode
+from repro.core.cauchy import StructuredGRS, cauchy_a2a, cost_cauchy
+from repro.core.matrices import lagrange_matrix
+
+RNG = np.random.default_rng(7)
+
+
+@pytest.mark.parametrize(
+    "K,R,W,p",
+    [(25, 4, 3, 1), (16, 4, 1, 1), (4, 25, 2, 1), (4, 16, 1, 2),
+     (7, 3, 1, 1), (3, 7, 1, 2), (12, 12, 2, 1), (1, 5, 1, 1), (5, 1, 1, 1)],
+)
+def test_framework_universal(K, R, W, p):
+    f = FERMAT
+    A = f.rand((K, R), RNG)
+    x = f.rand((K, W), RNG)
+    y, net = decentralized_encode(f, A, x, p=p)
+    assert np.array_equal(y, f.matmul(A.T, x))
+    assert net.C1 > 0 or K == R == 1
+
+
+@given(K=st.integers(1, 30), R=st.integers(1, 30), p=st.integers(1, 3),
+       seed=st.integers(0, 2**31))
+@settings(max_examples=40, deadline=None)
+def test_framework_property(K, R, p, seed):
+    """Any (K, R, p) and any A: sinks get x^T A (Def. 1)."""
+    f = FERMAT
+    rng = np.random.default_rng(seed)
+    A = f.rand((K, R), rng)
+    x = f.rand((K, 1), rng)
+    y, _ = decentralized_encode(f, A, x, p=p)
+    assert np.array_equal(y, f.matmul(A.T, x))
+
+
+@pytest.mark.parametrize("K,R", [(32, 8), (16, 16), (8, 32), (64, 16)])
+def test_framework_rs_method(K, R):
+    """Specific (Cauchy-like) method gives identical results to universal."""
+    f = FERMAT
+    sgrs = StructuredGRS.build(f, K, R)
+    A = sgrs.grs.A_direct()
+    x = f.rand((K, 2), RNG)
+    y_rs, net_rs = decentralized_encode(f, A, x, p=1, method="rs", sgrs=sgrs)
+    y_un, _ = decentralized_encode(f, A, x, p=1)
+    assert np.array_equal(y_rs, f.matmul(A.T, x))
+    assert np.array_equal(y_rs, y_un)
+
+
+def test_rs_encode_decode_any_k_of_n():
+    """MDS property end-to-end: any K of the N=K+R coded/systematic symbols
+    reconstruct the data (this is what coded checkpointing relies on)."""
+    f = FERMAT
+    K, R, W = 8, 4, 6
+    sgrs = StructuredGRS.build(f, K, R)
+    A = sgrs.grs.A_direct()
+    x = f.rand((K, W), RNG)
+    parity, _ = decentralized_encode(f, A, x, p=1, method="rs", sgrs=sgrs)
+    full = np.concatenate([x, parity])  # systematic codeword (N, W)
+    G = np.concatenate([np.eye(K, dtype=np.int64), A], axis=1)  # K x N
+    rng = np.random.default_rng(3)
+    for _ in range(10):
+        keep = np.sort(rng.choice(K + R, size=K, replace=False))
+        sub = G[:, keep]
+        from repro.core.matrices import gauss_inverse
+
+        rec = f.matmul(gauss_inverse(f, sub.T).T, full[keep])
+        # x = (sub^T)^-1 applied: full[keep] = sub^T x  =>  x = (sub^T)^-1 full[keep]
+        rec = f.matmul(gauss_inverse(f, sub.T), full[keep])
+        assert np.array_equal(rec, x), f"reconstruction failed for {keep}"
+
+
+def test_cauchy_block_is_lagrange_when_unit():
+    """Remark 9: u = v = 1 makes A_m a Lagrange matrix."""
+    f = FERMAT
+    sgrs = StructuredGRS.build(f, 8, 8)
+    A = sgrs.grs.A_direct()
+    L = lagrange_matrix(f, sgrs.grs.alphas, sgrs.grs.betas)
+    assert np.array_equal(A, L)
+
+
+def test_cauchy_costs_match_theorem7():
+    f = FERMAT
+    sgrs = StructuredGRS.build(f, 32, 8)
+    x = f.rand(8, RNG)
+    out = {}
+    net = RoundNetwork(8, 1)
+    net.run(cauchy_a2a(sgrs, 0, {k: x[k] for k in range(8)}, list(range(8)), 1, out))
+    assert (net.C1, net.C2) == cost_cauchy(sgrs, 0, 1)
+
+
+@pytest.mark.parametrize("K,R,p", [(10, 4, 1), (4, 27, 1), (4, 16, 2), (6, 6, 1), (3, 10, 1)])
+def test_nonsystematic(K, R, p):
+    f = FERMAT
+    G = f.rand((K, K + R), RNG)
+    x = f.rand((K, 1), RNG)
+    y, _ = nonsystematic_encode(f, G, x, p=p)
+    assert np.array_equal(y, f.matmul(G.T, x))
+
+
+def test_port_constraint_enforced():
+    """The simulator rejects schedules that exceed p ports."""
+    from repro.core.simulator import Msg
+
+    net = RoundNetwork(4, p=1)
+
+    def bad():
+        yield [Msg(0, 1, 1), Msg(0, 2, 1)]  # two sends from proc 0, p=1
+
+    with pytest.raises(AssertionError, match="port violation"):
+        net.run(bad())

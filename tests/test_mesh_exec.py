@@ -1,0 +1,22 @@
+"""Multi-device shard_map execution tests (subprocess: needs 8 devices)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+REPO = Path(__file__).resolve().parent.parent
+
+
+@pytest.mark.slow
+def test_mesh_checks_subprocess():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "mesh_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "MESH_CHECKS_OK" in proc.stdout
