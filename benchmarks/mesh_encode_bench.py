@@ -1,7 +1,8 @@
 """Standalone (subprocess) bench: HLO collective bytes of the coded
 checkpoint parity encode on an 8-device host mesh — universal vs RS-specific
-scheduling.  This is the paper's Table-I C2 gain *measured in lowered XLA
-collective traffic* rather than the abstract model.
+scheduling, planned through the unified `repro.api.Encoder`.  This is the
+paper's Table-I C2 gain *measured in lowered XLA collective traffic* rather
+than the abstract model.
 
 Must run in its own process: forces 8 host devices before jax init.
 """
@@ -12,47 +13,34 @@ os.environ["XLA_FLAGS"] = (
     + os.environ.get("XLA_FLAGS", ""))
 
 import time
-from functools import partial
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.api import CodeSpec, Encoder
 from repro.core.field import FERMAT
-from repro.core.parity import build_parity_tables, mesh_parity_encode
 from repro.launch.hlo_cost import analyze
 
 
 def main():
     f = FERMAT
-    mesh = Mesh(np.array(jax.devices()), ("d",))
-    N, W = 8, 4096
+    N, R, W = 8, 4, 4096
     x = jnp.asarray(f.rand((N, W), np.random.default_rng(0)).astype(np.uint32))
     for method in ("universal", "rs"):
-        t = build_parity_tables(f, N, 4, p=1, method=method)
-        arrs = t.device_arrays()
-        keys = list(arrs)
-
-        @partial(jax.shard_map, mesh=mesh,
-                 in_specs=(P("d"),) + tuple(P("d") for _ in keys),
-                 out_specs=P("d"))
-        def step(xb, *tb):
-            rows = {k: v[0] for k, v in zip(keys, tb)}
-            return mesh_parity_encode(xb[0], rows, t, "d")[None]
-
-        args = [jnp.asarray(arrs[k]) for k in keys]
+        spec = CodeSpec(kind="rs", K=N, R=R, p=1, W=W)
+        plan = Encoder.plan(spec, backend="mesh", method=method)
+        step = plan.mesh_callable()
         t0 = time.perf_counter()
-        lowered = jax.jit(lambda xg: step(xg, *args)).lower(x)
-        compiled = lowered.compile()
+        compiled = jax.jit(step).lower(x).compile()
         census = analyze(compiled.as_text())
         us = (time.perf_counter() - t0) * 1e6
-        y = step(x, *args)  # execute once for correctness
-        A = t.sgrs.grs.A_direct()
-        ok = np.array_equal(np.asarray(y)[:4], f.matmul(A.T, np.asarray(x, np.int64)))
-        print(f"mesh_encode/{method}_N8_R4_W{W},{us:.0f},"
+        y = plan.run(np.asarray(x, np.int64))  # execute once for correctness
+        ok = np.array_equal(y, f.matmul(plan.A.T, np.asarray(x, np.int64)))
+        c = plan.cost()
+        print(f"mesh_encode/{method}_N{N}_R{R}_W{W},{us:.0f},"
               f"collective_bytes={census['collective_bytes']:.0f};"
-              f"correct={int(ok)}")
+              f"model_C1={c.C1};model_C2={c.C2};correct={int(ok)}")
 
 
 if __name__ == "__main__":

@@ -1,6 +1,7 @@
 """The paper's own workload: decentralized encoding of a systematic
-Reed-Solomon code — universal vs specific scheduling, with the linear-model
-cost C = alpha*C1 + beta*log2(q)*C2 reported for both."""
+Reed-Solomon code — universal vs specific scheduling, planned through the
+unified `Encoder.plan(spec).run(x)` API, with both the Table-I model cost
+and the simulator-measured C = alpha*C1 + beta*log2(q)*C2 reported."""
 import sys
 from pathlib import Path
 
@@ -8,28 +9,32 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import numpy as np
 
-from repro.core import FERMAT, decentralized_encode
-from repro.core.cauchy import StructuredGRS
+from repro.api import CodeSpec, Encoder
 
 if __name__ == "__main__":
-    f = FERMAT
-    rng = np.random.default_rng(0)
     K, R, W = 256, 64, 8  # 256 sources, 64 parity sinks, 8-symbol payloads
+    spec = CodeSpec(kind="rs", K=K, R=R, W=W)
+    f = spec.field
     print(f"decentralized encoding: K={K} sources, R={R} sinks, W={W}, "
           f"F_{f.q}")
-    sgrs = StructuredGRS.build(f, K, R)
-    A = sgrs.grs.A_direct()
-    x = f.rand((K, W), rng)
+    x = f.rand((K, W), np.random.default_rng(0))
 
-    y_u, net_u = decentralized_encode(f, A, x, p=1)
-    y_r, net_r = decentralized_encode(f, A, x, p=1, method="rs", sgrs=sgrs)
-    assert np.array_equal(y_u, y_r) and np.array_equal(y_u, f.matmul(A.T, x))
+    plan_u = Encoder.plan(spec, backend="simulator", method="universal")
+    plan_r = Encoder.plan(spec, backend="simulator", method="rs")
+    y_u, y_r = plan_u.run(x), plan_r.run(x)
+    assert np.array_equal(y_u, y_r)
+    assert np.array_equal(y_u, f.matmul(plan_u.A.T, x))
+    print(f"auto-selected method for this spec: "
+          f"{Encoder.plan(spec, backend='simulator').method}")
 
-    alpha, beta_bits = 1e-5, 17e-9
-    for name, net in [("universal (prepare-and-shoot)", net_u),
-                      ("RS-specific (2x draw-and-loose)", net_r)]:
+    alpha, beta_bits = Encoder.ALPHA, Encoder.BETA_BITS
+    for name, plan in [("universal (prepare-and-shoot)", plan_u),
+                       ("RS-specific (2x draw-and-loose)", plan_r)]:
+        net = plan.sim_net
         print(f"  {name:32s} C1={net.C1:3d} rounds  C2={net.C2:4d} elems  "
-              f"C={net.cost(alpha, beta_bits) * 1e6:.1f} us (model)")
+              f"C={net.cost(alpha, beta_bits) * 1e6:.1f} us (measured on the "
+              f"round network)")
+    net_u, net_r = plan_u.sim_net, plan_r.sim_net
     print(f"  C2 reduction from the paper's specific algorithm: "
           f"{net_u.C2 - net_r.C2} field elements "
           f"({100 * (1 - net_r.C2 / net_u.C2):.0f}%)")

@@ -1,4 +1,5 @@
-"""Batched greedy serving demo (prefill + KV-cached decode)."""
+"""Batched greedy serving demo (prefill + KV-cached decode), with the coded
+parameter-shard self-check (unified encoding API) gating startup."""
 import sys
 from pathlib import Path
 
@@ -6,7 +7,7 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 if __name__ == "__main__":
     sys.argv = ["serve_demo", "--arch", "mamba2_780m", "--batch", "4",
-                "--prompt-len", "12", "--gen-len", "24"]
+                "--prompt-len", "12", "--gen-len", "24", "--coded-selfcheck"]
     from repro.launch.serve import main
 
     main()

@@ -1,0 +1,22 @@
+"""Unified encoding API: one planner over simulator, mesh, and kernel
+backends.
+
+    from repro.api import CodeSpec, Encoder
+
+    spec = CodeSpec(kind="rs", K=16, R=4)
+    plan = Encoder.plan(spec, backend="simulator")   # auto-selects algorithm
+    parity = plan.run(x)                             # (R, W) sink values
+
+The same plan semantics execute on three backends — `"simulator"`
+(RoundNetwork lockstep, measured C1/C2), `"mesh"` (shard_map/ppermute,
+devices as processors), `"local"` (Pallas/jnp kernel) — with bitwise-equal
+sink values.  Host-side tables are cached per spec; see `planner` for the
+cache contract and `spec` for the CodeSpec fields.
+"""
+from .planner import ALPHA_DEFAULT, BETA_BITS_DEFAULT, Encoder, EncodePlan, method_costs
+from .spec import CodeSpec
+
+__all__ = [
+    "CodeSpec", "Encoder", "EncodePlan", "method_costs",
+    "ALPHA_DEFAULT", "BETA_BITS_DEFAULT",
+]

@@ -1,0 +1,121 @@
+"""The three interchangeable executors behind `EncodePlan.run`.
+
+    simulator — the round-based `RoundNetwork` lockstep engine (exact numpy
+                oracle; also yields measured C1/C2 on `plan.sim_net`)
+    mesh      — devices-as-processors `shard_map`/`ppermute` execution (one
+                device per source, sinks overlaid on devices 0..R-1)
+    local     — single-device `kernels.ops.encode_blocks` (Pallas/jnp field
+                matmul; no communication schedule at all)
+
+All three return the same sink values bitwise: sink r holds x^T A[:, r] over
+F_q.  Inputs/outputs are normalized to numpy int64 (K, W) -> (R, W).
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+from ..core.dft_a2a import dft_a2a
+from ..core.framework import decentralized_encode
+from ..core.simulator import RoundNetwork
+
+
+def run_simulator(plan, x: np.ndarray) -> np.ndarray:
+    """Execute the plan on the paper's p-port round network; the network
+    (with measured C1/C2) is kept on `plan.sim_net` for inspection."""
+    spec, f = plan.spec, plan.field
+    x = f.arr(x)
+    if spec.kind == "dft":
+        net = RoundNetwork(spec.K, spec.p)
+        out: dict[int, np.ndarray] = {}
+        net.run(dft_a2a(f, {k: x[k] for k in range(spec.K)},
+                        list(range(spec.K)), spec.p, spec.P, out))
+        y = np.stack([out[k] for k in range(spec.K)])
+    else:
+        method = "rs" if plan.method == "rs" else "universal"
+        y, net = decentralized_encode(f, plan.A, x, p=spec.p, method=method,
+                                      sgrs=plan.sgrs)
+    plan.sim_net = net
+    return np.asarray(y, np.int64)
+
+
+def run_local(plan, x: np.ndarray) -> np.ndarray:
+    """Single-device encode on the Pallas/jnp kernel path (no network)."""
+    import jax.numpy as jnp
+
+    from ..kernels.ops import encode_blocks
+
+    x32 = jnp.asarray(np.asarray(x) % plan.field.q, jnp.uint32)
+    y = encode_blocks(x32, jnp.asarray(plan.A, jnp.uint32))
+    return np.asarray(y, np.int64)
+
+
+def _require_devices(n: int):
+    import jax
+
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"mesh backend needs >= {n} devices, found {len(devs)} "
+            "(hint: XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+    return devs[:n]
+
+
+def build_mesh_callable(plan):
+    """Jitted global-array function (K, W) uint32 -> (K, W) uint32 running
+    the plan's schedule under shard_map on the first K devices.  Device k
+    holds source k; after the call devices 0..R-1 hold the sink values."""
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ..core.parity import mesh_parity_encode
+    from ..core.shardmap_exec import mesh_dft, shard_map
+
+    spec = plan.spec
+    devs = _require_devices(spec.K)
+    mesh = Mesh(np.array(devs), ("enc",))
+
+    if spec.kind == "dft":
+        t = plan.tables.dft_mesh_tables()
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P("enc"), P("enc"), P("enc")), out_specs=P("enc"))
+        def step(xb, ca, cb):
+            return mesh_dft(xb[0], ca[0], cb[0], t, "enc")[None]
+
+        args = (jnp.asarray(t.ca.T), jnp.asarray(t.cb.T))
+        return jax.jit(lambda xg: step(xg, *args))
+
+    if spec.K % spec.R != 0:
+        raise NotImplementedError(
+            f"mesh backend covers the R | K grid (Sec. III-A); got "
+            f"K={spec.K}, R={spec.R}")
+    t = plan.tables.mesh_tables(plan.method)
+    arrs = t.device_arrays()
+    keys = list(arrs)
+
+    @partial(shard_map, mesh=mesh,
+             in_specs=(P("enc"),) + tuple(P("enc") for _ in keys),
+             out_specs=P("enc"))
+    def step(xb, *tb):
+        rows = {k: v[0] for k, v in zip(keys, tb)}
+        return mesh_parity_encode(xb[0], rows, t, "enc")[None]
+
+    args = tuple(jnp.asarray(arrs[k]) for k in keys)
+    return jax.jit(lambda xg: step(xg, *args))
+
+
+def run_mesh(plan, x: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+
+    spec = plan.spec
+    fn = plan.mesh_callable()
+    y = np.asarray(fn(jnp.asarray(np.asarray(x) % plan.field.q, jnp.uint32)),
+                   np.int64)
+    return y if spec.kind == "dft" else y[: spec.R]
+
+
+RUNNERS = {"simulator": run_simulator, "local": run_local, "mesh": run_mesh}
+BACKENDS = tuple(RUNNERS)

@@ -1,0 +1,301 @@
+"""Encoder: one planner over the simulator, mesh, and kernel backends.
+
+    spec = CodeSpec(kind="rs", K=16, R=4)
+    plan = Encoder.plan(spec, backend="simulator")   # method="auto"
+    y = plan.run(x)                                  # (R, W) sink values
+
+`plan()` does all host-side work once — generator matrix / StructuredGRS
+construction, cost-model algorithm selection, mesh table precompute — and
+caches it keyed by the spec, so the hot path (`plan.run`) never rebuilds
+tables.  Two cache levels:
+
+  * table cache: `CodeSpec.table_key()` (spec minus payload width W) ->
+    `HostTables`.  Shared across backends and W variants; this is what used
+    to be rebuilt on every `shardmap_exec.build_*_tables` /
+    `framework.decentralized_encode` call.
+  * plan cache: (spec, backend, method, A-digest) -> `EncodePlan`, so mesh
+    plans also keep their compiled shard_map executable across calls.
+
+`method="auto"` picks the argmin of the Table-I linear cost
+C = alpha*C1 + beta_bits*C2 (C2 already scaled by the spec's payload width
+W) over the schedules available for the spec (universal prepare-and-shoot
+always; the RS/Lagrange-specific draw-and-loose factorization when the code
+is structured).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass, field as dc_field
+from typing import Any, Callable
+
+import numpy as np
+
+from ..core import cost_model
+from ..core.cauchy import StructuredGRS, cost_cauchy
+from ..core.cost_model import LinearCost
+from ..core.dft_a2a import cost_dft
+from ..core.field import FERMAT_Q, Field
+from .backends import BACKENDS, RUNNERS, build_mesh_callable
+from .spec import CodeSpec
+
+# default link model used for auto selection and describe(): ~10us latency,
+# 17 bits/ns-class links (the constants the demos/benchmarks report with)
+ALPHA_DEFAULT = 1e-5
+BETA_BITS_DEFAULT = 17e-9
+
+
+# ---------------------------------------------------------------------------
+# host-side tables (cached per spec, W-independent)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class HostTables:
+    """Everything host-side a plan needs: the generator block, the structured
+    code (when any), and lazily-built mesh schedules per method."""
+
+    spec: CodeSpec
+    field: Field
+    A: np.ndarray                      # (K, R) generator block
+    sgrs: StructuredGRS | None
+    _mesh: dict[str, Any] = dc_field(default_factory=dict)
+
+    def mesh_tables(self, method: str):
+        """ParityTables for the framework grid, built once per method."""
+        if method not in self._mesh:
+            from ..core.parity import build_encode_tables
+
+            self._mesh[method] = build_encode_tables(
+                self.field, self.A, p=self.spec.p, method=method,
+                sgrs=self.sgrs)
+        return self._mesh[method]
+
+    def dft_mesh_tables(self):
+        if "dft" not in self._mesh:
+            from ..core.shardmap_exec import build_dft_tables
+
+            self._mesh["dft"] = build_dft_tables(self.field, self.spec.K,
+                                                 self.spec.K)
+        return self._mesh["dft"]
+
+
+_TABLES: dict[tuple, HostTables] = {}
+_PLANS: dict[tuple, "EncodePlan"] = {}
+_STATS = {"table_hits": 0, "table_misses": 0,
+          "plan_hits": 0, "plan_misses": 0}
+
+
+def _digest(A: np.ndarray | None) -> str | None:
+    if A is None:
+        return None
+    A = np.ascontiguousarray(np.asarray(A, np.int64))
+    return hashlib.sha1(repr(A.shape).encode() + A.tobytes()).hexdigest()
+
+
+def _host_tables(spec: CodeSpec, A: np.ndarray | None, digest: str | None) -> HostTables:
+    key = spec.table_key() + (digest,)
+    hit = _TABLES.get(key)
+    if hit is not None:
+        _STATS["table_hits"] += 1
+        return hit
+    _STATS["table_misses"] += 1
+    f = spec.field
+    sgrs = None
+    if A is not None:
+        A = f.arr(A)
+        if A.shape != (spec.K, spec.R):
+            raise ValueError(f"A must be ({spec.K}, {spec.R}), got {A.shape}")
+        if spec.kind in ("dft", "rs"):
+            raise ValueError(
+                f"kind={spec.kind!r} derives its matrix from the spec; drop "
+                "A (use kind='universal' or 'lagrange' for explicit matrices)")
+    else:
+        if spec.structured():
+            sgrs = StructuredGRS.build(f, spec.K, spec.R, P=spec.P,
+                                       lagrange=spec.kind == "lagrange")
+            A = sgrs.grs.A_direct()
+        else:
+            A = spec.default_matrix(f)
+    tables = HostTables(spec, f, A, sgrs)
+    _TABLES[key] = tables
+    return tables
+
+
+# ---------------------------------------------------------------------------
+# method selection (Table I cost model)
+# ---------------------------------------------------------------------------
+
+def method_costs(spec: CodeSpec, sgrs: StructuredGRS | None) -> dict[str, LinearCost]:
+    """Analytic (C1, C2) of the full framework encode per available method.
+
+    C2 is already scaled by the spec's payload width W (matching the
+    measured `RoundNetwork.C2` of a W-wide run) — evaluate totals with
+    `cost.total(alpha, beta_bits)` at W=1, not with W again."""
+    if spec.kind == "dft":
+        c1, c2 = cost_dft(spec.K, spec.P, spec.p)
+        return {"dft": LinearCost(c1, c2 * spec.W)}
+    out = {
+        "universal": cost_model.framework(
+            spec.K, spec.R, spec.p,
+            cost_model.universal(min(spec.K, spec.R), spec.p), spec.W)
+    }
+    if sgrs is not None:
+        a2a = LinearCost(*cost_cauchy(sgrs, 0, spec.p))
+        out["rs"] = cost_model.framework(spec.K, spec.R, spec.p, a2a, spec.W)
+    return out
+
+
+def _resolve_method(spec: CodeSpec, sgrs: StructuredGRS | None, method: str
+                    ) -> tuple[str, dict[str, LinearCost]]:
+    costs = method_costs(spec, sgrs)
+    if method == "auto":
+        # argmin of the linear cost (W already folded into each C2);
+        # specific schedule wins exact ties
+        chosen = min(costs, key=lambda m: (
+            costs[m].total(ALPHA_DEFAULT, BETA_BITS_DEFAULT),
+            m == "universal"))
+        return chosen, costs
+    if method not in costs:
+        raise ValueError(
+            f"method {method!r} unavailable for {spec.kind!r} spec "
+            f"(have {tuple(costs)})")
+    return method, costs
+
+
+# ---------------------------------------------------------------------------
+# EncodePlan
+# ---------------------------------------------------------------------------
+
+@dataclass
+class EncodePlan:
+    """An executable encode: spec + resolved method + backend + host tables.
+
+    Obtained from `Encoder.plan`; cached, so hold on to it (or re-call
+    `Encoder.plan` — both hit the cache) and call `.run` per payload.
+    """
+
+    spec: CodeSpec
+    backend: str
+    method: str
+    tables: HostTables
+    costs: dict[str, LinearCost]
+    # RoundNetwork of the LAST simulator run on this plan.  Plans are cached
+    # and shared — read sim_net immediately after your own .run(), not later
+    # (another caller's run overwrites it).
+    sim_net: Any = None
+    _mesh_fn: Callable | None = None
+
+    @property
+    def field(self) -> Field:
+        return self.tables.field
+
+    @property
+    def A(self) -> np.ndarray:
+        """The (K, R) generator block (x^T A are the sink values)."""
+        return self.tables.A
+
+    @property
+    def sgrs(self) -> StructuredGRS | None:
+        return self.tables.sgrs
+
+    def run(self, x) -> np.ndarray:
+        """Encode payloads x (K,) or (K, W) -> sink values (R,)/(R, W)."""
+        x = np.asarray(x)
+        if x.shape[0] != self.spec.K:
+            raise ValueError(f"x must have leading dim K={self.spec.K}, "
+                             f"got {x.shape}")
+        squeeze = x.ndim == 1
+        y = RUNNERS[self.backend](self, x[:, None] if squeeze else x)
+        return y[:, 0] if squeeze else y
+
+    def cost(self) -> LinearCost:
+        """(C1, C2) of the chosen schedule per the Table-I cost model."""
+        return self.costs[self.method]
+
+    def mesh_callable(self):
+        """The jitted shard_map executable (mesh backend only): global
+        (K, W) uint32 -> (K, W) uint32; kept for the plan's lifetime."""
+        if self.backend != "mesh":
+            raise ValueError("mesh_callable() is for backend='mesh' plans")
+        if self._mesh_fn is None:
+            self._mesh_fn = build_mesh_callable(self)
+        return self._mesh_fn
+
+    def describe(self) -> str:
+        s = self.spec
+        c = self.cost()
+        model_us = c.total(ALPHA_DEFAULT, BETA_BITS_DEFAULT) * 1e6
+        lines = [
+            f"EncodePlan[{s.kind}] K={s.K} R={s.R} p={s.p} W={s.W} q={s.q}",
+            f"  backend : {self.backend}",
+            f"  method  : {self.method} "
+            f"(available: {', '.join(sorted(self.costs))})",
+            f"  cost    : C1={c.C1} rounds, C2={c.C2} elems/port "
+            f"(model C ~ {model_us:.1f} us)",
+            f"  tables  : cached, key={s.table_key()}",
+        ]
+        if self.backend == "local":
+            lines.append("  note    : local backend runs the Pallas/jnp "
+                         "field-matmul kernel; no schedule is executed")
+        return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# Encoder
+# ---------------------------------------------------------------------------
+
+class Encoder:
+    """Namespace for the plan-then-execute API (all classmethods)."""
+
+    ALPHA = ALPHA_DEFAULT
+    BETA_BITS = BETA_BITS_DEFAULT
+
+    @classmethod
+    def plan(cls, spec: CodeSpec, backend: str = "simulator",
+             method: str = "auto", A: np.ndarray | None = None) -> EncodePlan:
+        """Plan an encode: resolve the algorithm, build-or-reuse host tables,
+        and return the cached executable plan.
+
+        backend: "simulator" | "mesh" | "local"
+        method : "auto" (cost-model argmin) | "universal" | "rs" | "dft"
+        A      : explicit (K, R) generator block — required for
+                 kind="universal" specs without a seed; allowed for
+                 kind="lagrange" with arbitrary (unstructured) points, in
+                 which case only the universal schedule applies.
+        """
+        if backend not in BACKENDS:
+            raise ValueError(f"unknown backend {backend!r}; " f"expected one of {BACKENDS}")
+        if backend in ("local", "mesh") and spec.q != FERMAT_Q:
+            raise ValueError(
+                f"backend {backend!r} runs the uint32 Fermat kernels "
+                f"(q={FERMAT_Q} only); use backend='simulator' for q={spec.q}")
+        digest = _digest(A)
+        plan_key = (spec, backend, method, digest)
+        hit = _PLANS.get(plan_key)
+        if hit is not None:
+            _STATS["plan_hits"] += 1
+            return hit
+        _STATS["plan_misses"] += 1
+        tables = _host_tables(spec, A, digest)
+        resolved, costs = _resolve_method(spec, tables.sgrs, method)
+        plan = EncodePlan(spec, backend, resolved, tables, costs)
+        _PLANS[plan_key] = plan
+        return plan
+
+    @classmethod
+    def auto_method(cls, spec: CodeSpec) -> str:
+        """The method `method="auto"` resolves to for this spec."""
+        sgrs = None
+        if spec.structured():
+            sgrs = _host_tables(spec, None, None).sgrs
+        return _resolve_method(spec, sgrs, "auto")[0]
+
+    @classmethod
+    def cache_info(cls) -> dict[str, int]:
+        return dict(_STATS, plans=len(_PLANS), tables=len(_TABLES))
+
+    @classmethod
+    def cache_clear(cls) -> None:
+        _PLANS.clear()
+        _TABLES.clear()
+        for k in _STATS:
+            _STATS[k] = 0

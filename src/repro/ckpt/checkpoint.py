@@ -36,7 +36,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.cauchy import StructuredGRS
+from ..api import CodeSpec, Encoder
 from ..core.field import FERMAT, bytes_to_symbols, symbols_to_bytes
 from ..core.parity import reconstruct
 
@@ -100,8 +100,18 @@ class CodedCheckpointer:
     def __post_init__(self):
         self.field = self.field or FERMAT
         assert self.n_shards % self.n_parity == 0, "R | N (Remark 4)"
-        self.sgrs = StructuredGRS.build(self.field, self.n_shards, self.n_parity)
-        self._A = self.sgrs.grs.A_direct()
+        # unified encoding API: the plan carries the StructuredGRS code and
+        # its generator block; the plan cache means repeated checkpointer
+        # instances (reshard, restarts) never rebuild the code tables.
+        # The uint32 kernel backend is Fermat-only; other fields fall back
+        # to the exact host matmul (same generator block either way).
+        spec = CodeSpec(kind="rs", K=self.n_shards, R=self.n_parity,
+                        q=self.field.q)
+        self._plan = (Encoder.plan(spec, backend="local")
+                      if self.field.q == FERMAT.q else None)
+        meta = self._plan or Encoder.plan(spec, backend="simulator")
+        self.sgrs = meta.sgrs
+        self._A = meta.A
         Path(self.directory).mkdir(parents=True, exist_ok=True)
 
     # -- encode -------------------------------------------------------------
@@ -113,8 +123,14 @@ class CodedCheckpointer:
         return np.concatenate([sym, pad]).reshape(self.n_shards, L)
 
     def encode_parity(self, shards: np.ndarray) -> np.ndarray:
-        """(R, L) parity — same code the in-network mesh encode computes."""
-        return self.field.matmul(self._A.T, shards)
+        """(R, L) parity — same code the in-network mesh encode computes.
+
+        Runs through `Encoder.plan(..., backend="local").run`, i.e. the
+        kernels.ops encode path (previously a host-side field.matmul);
+        non-Fermat fields keep the exact host matmul."""
+        if self._plan is None:
+            return self.field.matmul(self._A.T, shards)
+        return self._plan.run(shards)
 
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: Any, background: bool = False) -> str:
@@ -139,8 +155,8 @@ class CodedCheckpointer:
                 shutil.rmtree(final)
             os.rename(tmp, final)
 
+        self.wait()  # single-writer: join any in-flight background save
         if background:
-            self.wait()
             self._thread = threading.Thread(target=_write, daemon=True)
             self._thread.start()
         else:

@@ -1,3 +1,9 @@
+"""Coding-layer wrappers over the unified `repro.api` encoder.
+
+Both coders plan their encodes through `Encoder.plan` (see
+`LagrangeComputer.encode_plan` / `GradientCoder.encode_plan`); the re-exports
+below are kept as the stable entry points for train/serve code.
+"""
 from .gradient_code import GradientCoder, coded_gradient
 from .lagrange_compute import LagrangeComputer
 

@@ -1,15 +1,34 @@
 """Core reproduction of *On the Encoding Process in Decentralized Systems*.
 
-Public API:
+Public API — start with the unified planner (`repro.api`), which fronts
+everything in this package behind one plan-then-execute call:
+
+    from repro.api import CodeSpec, Encoder
+    plan = Encoder.plan(CodeSpec(kind="rs", K=16, R=4), backend="simulator")
+    parity = plan.run(x)      # identical sinks on "mesh" and "local" too
+
+`Encoder.plan` picks the cheapest schedule via `cost_model`, caches all
+host-side tables per spec, and executes on the round-network simulator, the
+shard_map/ppermute mesh, or the local Pallas/jnp kernel.
+
+Engine-level entry points (what the planner schedules; stable, and still
+the right layer for new algorithms or paper-fidelity experiments):
     Field, FERMAT               — finite fields (field.py)
     RoundNetwork, Msg           — the paper's communication model (simulator.py)
     prepare_shoot, universal_a2a — Sec. IV universal algorithm
     dft_a2a                     — Sec. V-A permuted-DFT algorithm
     draw_loose, StructuredPoints — Sec. V-B Vandermonde algorithm
     StructuredGRS, cauchy_a2a   — Sec. VI systematic RS / Lagrange
-    decentralized_encode        — Sec. III framework
+    decentralized_encode        — Sec. III framework (simulator backend body)
     nonsystematic_encode        — Appendix B
     cost_model                  — Table I analytic costs + baselines
+    parity.build_encode_tables  — mesh tables for any generator block
+    shardmap_exec               — shard_map bodies + host table builders
+
+Legacy direct call sites (`decentralized_encode(...)`,
+`shardmap_exec.build_*_tables(...)` at every use) are superseded by
+`Encoder.plan` — the planner is the only layer that caches tables and
+selects algorithms; prefer it in new code.
 """
 from .field import FERMAT, FERMAT_Q, Field
 from .simulator import Msg, RoundNetwork, run_lockstep

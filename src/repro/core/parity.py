@@ -43,14 +43,18 @@ from .matrices import StructuredPoints, gauss_inverse
 
 @dataclass(frozen=True)
 class ParityTables:
-    """Everything the jitted parity-encode step needs, precomputed host-side."""
+    """Everything the jitted parity-encode step needs, precomputed host-side.
+
+    `sgrs` is None when the tables were built from an arbitrary (non-GRS)
+    generator block via `build_encode_tables(..., method="universal")`.
+    """
 
     N: int
     R: int
     M: int
     p: int
     method: str
-    sgrs: StructuredGRS
+    sgrs: StructuredGRS | None
     # universal path
     univ: UniversalTables | None
     # rs path: inverse DL on alpha blocks + forward DL on beta
@@ -130,10 +134,30 @@ def build_parity_tables(
     field: Field, N: int, R: int, p: int = 1, method: str = "rs"
 ) -> ParityTables:
     """Systematic [N+R, N] GRS parity across an N-device axis, R | N."""
+    sgrs = StructuredGRS.build(field, N, R, P=2)
+    return build_encode_tables(field, sgrs.grs.A_direct(), p=p, method=method,
+                               sgrs=sgrs)
+
+
+def build_encode_tables(
+    field: Field,
+    A: np.ndarray,
+    p: int = 1,
+    method: str = "universal",
+    sgrs: StructuredGRS | None = None,
+) -> ParityTables:
+    """Mesh-encode tables for an arbitrary (K, R) generator block A, R | K.
+
+    The K devices of the axis hold the sources; sink r overlays device r
+    (Sec. III-A with borrowed sinks).  method="universal" works for ANY A;
+    method="rs" additionally needs the StructuredGRS code A came from
+    (Thm. 7 factorization).  This is the single table builder behind both
+    `build_parity_tables` and the unified `repro.api` mesh backend.
+    """
+    A = field.arr(A)
+    N, R = A.shape
     assert N % R == 0, "R must divide the axis size"
     M = N // R
-    sgrs = StructuredGRS.build(field, N, R, P=2)
-    A = sgrs.grs.A_direct()
 
     univ = None
     pre = post = i_scale = f_scale = None
@@ -142,6 +166,8 @@ def build_parity_tables(
         mats = [A[m * R : (m + 1) * R, :] for m in range(M)]
         univ = build_universal_tables(field, mats, N, p, group_stride=1)
     elif method == "rs":
+        assert sgrs is not None and sgrs.K == N and sgrs.R == R, \
+            "method='rs' needs the StructuredGRS code A was built from"
         pre = np.zeros(N, np.uint32)
         post = np.zeros(N, np.uint32)
         for m in range(M):

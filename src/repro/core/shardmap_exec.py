@@ -33,6 +33,11 @@ from .matrices import StructuredPoints, gauss_inverse, vandermonde
 from .prepare_shoot import phase_split
 from ..kernels.ref import gf_matmul_ref
 
+# jax < 0.5 ships shard_map under jax.experimental; newer jax at top level
+shard_map = getattr(jax, "shard_map", None)
+if shard_map is None:  # pragma: no cover - version dependent
+    from jax.experimental.shard_map import shard_map
+
 
 # ---------------------------------------------------------------------------
 # grouped ppermute helper

@@ -1,0 +1,91 @@
+"""Mesh context for model code: logical-axis sharding constraints.
+
+Model layers annotate activations with *logical* axis names
+(`constrain(x, "batch", None, "model")`); this module resolves them against
+whatever mesh is active:
+
+  * no mesh (single-device smoke tests, simulator runs): no-op,
+  * a mesh without the named axis, or a non-divisible dimension: that axis is
+    dropped by `sharding.guard` (replicated) instead of erroring,
+  * "batch" maps to all data-parallel axes present (("pod", "data") on the
+    multi-pod production mesh, ("data",) on host meshes).
+
+Keeping the resolution here (not in the layers) lets the same model code run
+unmodified under 1-device pytest, the 8-device host mesh, and the 16x16(+pod)
+production meshes.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec
+
+from .sharding import guard
+
+# logical name -> candidate mesh axes (first all present are combined)
+_LOGICAL = {"batch": ("pod", "data")}
+
+_ACTIVE = threading.local()  # set by activation_sharding()
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh, multi_pod: bool = False):
+    """Scope in which `constrain` resolves against `mesh`.
+
+    Entered by the launchers around lowering/compilation (alongside
+    `with mesh:`); `multi_pod=False` keeps the "batch" logical axis off the
+    pod axis even when the mesh has one (pipeline-style pod use)."""
+    prev = getattr(_ACTIVE, "ctx", None)
+    _ACTIVE.ctx = (mesh, multi_pod)
+    try:
+        yield
+    finally:
+        _ACTIVE.ctx = prev
+
+
+def current_mesh():
+    """The mesh `constrain` resolves against: the innermost
+    `activation_sharding` scope, else the ambient `with mesh:` context."""
+    ctx = getattr(_ACTIVE, "ctx", None)
+    if ctx is not None:
+        return ctx[0]
+    try:
+        from jax.interpreters import pxla
+
+        mesh = pxla.thread_resources.env.physical_mesh
+        if mesh is not None and not mesh.empty:
+            return mesh
+    except Exception:
+        pass
+    return None
+
+
+def _resolve(name, axis_sizes: dict[str, int]):
+    if name is None:
+        return None
+    if isinstance(name, tuple):
+        kept = tuple(a for a in name if a in axis_sizes)
+        return kept if kept else None
+    if name in _LOGICAL:
+        kept = tuple(a for a in _LOGICAL[name] if a in axis_sizes)
+        if not kept:
+            return None
+        return kept if len(kept) > 1 else kept[0]
+    return name if name in axis_sizes else None
+
+
+def constrain(x, *axes):
+    """`with_sharding_constraint(x, P(*axes))` with logical-name resolution
+    and divisibility guarding; identity when no mesh is active."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    ctx = getattr(_ACTIVE, "ctx", None)
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    if ctx is not None and not ctx[1]:
+        sizes.pop("pod", None)  # pod axis not batch-parallel in this scope
+    spec = PartitionSpec(*(_resolve(a, sizes) for a in axes))
+    spec = guard(spec, x.shape, sizes)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

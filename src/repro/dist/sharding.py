@@ -1,0 +1,151 @@
+"""Sharding rules: PartitionSpec validation plus the spec factories the
+dry-run/production launchers use for params, optimizer state, batches and
+decode caches.
+
+`guard` is the single rule deciding whether a requested sharding axis is
+legal for a concrete array shape: an axis (or tuple of axes) is kept only if
+every named mesh axis exists and the array dimension is divisible by the
+product of their sizes; otherwise that dimension falls back to replication
+(None).  Dropping instead of erroring is deliberate — reduced smoke configs
+frequently have dimensions (e.g. a 30-wide vocab slice) that the production
+16-way model axis cannot divide, and the numerically-identical replicated
+layout is always available.
+
+The `*_specs` factories all funnel through `guard`, so every produced spec
+is valid for the concrete mesh by construction:
+
+  * params / optimizer state: tensor-parallel over "model" on the largest
+    divisible dimension (vocab for embeddings, features for projections);
+    scalars and non-divisible leaves replicate,
+  * batches / activations: leading batch dimension over the data-parallel
+    axes ("pod" joining "data" on multi-pod meshes), plus "model" on the
+    trailing feature dimension of rank >= 3 activations (vocab-sharded
+    logits, frame/vision embeddings),
+  * decode caches: layer-stacked leaves (layers, batch, ...) shard batch on
+    dim 1 and "model" on the innermost divisible feature dimension.
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec
+
+
+def guard(spec: PartitionSpec, shape: tuple[int, ...],
+          axis_sizes: dict[str, int]) -> PartitionSpec:
+    """Validate `spec` for an array of `shape` on a mesh with `axis_sizes`.
+
+    Each spec entry is kept iff all its mesh axes exist and the corresponding
+    array dimension is divisible by the product of their sizes; non-divisible
+    (or unknown-axis) entries are dropped to None.
+    """
+    entries = []
+    for dim, entry in enumerate(spec):
+        if entry is None:
+            entries.append(None)
+            continue
+        axes = entry if isinstance(entry, tuple) else (entry,)
+        size = 1
+        known = True
+        for a in axes:
+            if a not in axis_sizes:
+                known = False
+                break
+            size *= axis_sizes[a]
+        if known and dim < len(shape) and shape[dim] % size == 0:
+            entries.append(entry)
+        else:
+            entries.append(None)
+    return PartitionSpec(*entries)
+
+
+# ---------------------------------------------------------------------------
+# spec factories (all guarded)
+# ---------------------------------------------------------------------------
+
+def data_axes(axis_sizes: dict[str, int], multi_pod: bool):
+    """The batch-dimension mesh axes: ("pod", "data") when the pod axis is
+    batch-parallel, else ("data",)."""
+    names = ("pod", "data") if multi_pod else ("data",)
+    kept = tuple(a for a in names if axis_sizes.get(a, 0) > 1)
+    if not kept:
+        return None
+    return kept if len(kept) > 1 else kept[0]
+
+
+def _model_dim(shape: tuple[int, ...], msize: int, skip: tuple[int, ...] = ()):
+    """Largest dimension divisible by the model-axis size (ties -> last)."""
+    best = None
+    for d, n in enumerate(shape):
+        if d in skip or msize < 2 or n % msize != 0 or n < msize:
+            continue
+        if best is None or n >= shape[best]:
+            best = d
+    return best
+
+
+def _param_leaf(shape, axis_sizes) -> PartitionSpec:
+    msize = axis_sizes.get("model", 1)
+    entries = [None] * len(shape)
+    d = _model_dim(shape, msize)
+    if d is not None:
+        entries[d] = "model"
+    return guard(PartitionSpec(*entries), shape, axis_sizes)
+
+
+def param_specs(cfg, params, axis_sizes: dict[str, int], multi_pod: bool):
+    """Tensor-parallel parameter layout: "model" on the largest divisible
+    dimension of each leaf (vocab for embeddings, features elsewhere)."""
+    del cfg, multi_pod
+    return jax.tree.map(lambda l: _param_leaf(l.shape, axis_sizes), params)
+
+
+def opt_state_specs(cfg, params, opt_state, axis_sizes: dict[str, int],
+                    multi_pod: bool):
+    """Optimizer state follows the parameter rule leaf-by-leaf (moment
+    buffers share param shapes; factored/scalar leaves fall out of the same
+    divisibility rule)."""
+    del cfg, params, multi_pod
+    return jax.tree.map(lambda l: _param_leaf(l.shape, axis_sizes), opt_state)
+
+
+def batch_specs(cfg, batch, axis_sizes: dict[str, int], multi_pod: bool):
+    """Model inputs/outputs: batch dim 0 over the data axes; rank >= 3
+    activations additionally put "model" on the trailing feature dim
+    (vocab-sharded logits, vision/frame embeddings)."""
+    del cfg
+    dax = data_axes(axis_sizes, multi_pod)
+
+    def rule(leaf):
+        shape = leaf.shape
+        if not shape:
+            return PartitionSpec()
+        entries = [None] * len(shape)
+        entries[0] = dax
+        if len(shape) >= 3:
+            entries[-1] = "model"
+        return guard(PartitionSpec(*entries), shape, axis_sizes)
+
+    return jax.tree.map(rule, batch)
+
+
+def cache_specs(cfg, cache, axis_sizes: dict[str, int], multi_pod: bool):
+    """Decode caches are layer-stacked (layers, batch, ...): batch on dim 1,
+    "model" on the innermost divisible feature dimension (head_dim / heads),
+    never on the layer or batch dims."""
+    del cfg
+    dax = data_axes(axis_sizes, multi_pod)
+    msize = axis_sizes.get("model", 1)
+
+    def rule(leaf):
+        shape = leaf.shape
+        if len(shape) < 2:
+            return PartitionSpec(*([None] * len(shape)))
+        entries = [None] * len(shape)
+        entries[1] = dax
+        for d in range(len(shape) - 1, 1, -1):
+            if msize >= 2 and shape[d] % msize == 0 and shape[d] >= msize:
+                entries[d] = "model"
+                break
+        return guard(PartitionSpec(*entries), shape, axis_sizes)
+
+    return jax.tree.map(rule, cache)

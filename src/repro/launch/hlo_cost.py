@@ -179,8 +179,10 @@ def _group_size(line: str) -> int:
 def _dot_flops(result_shape: str, rest: str, shapes: dict) -> float:
     """2 * result_elems * contracted_size."""
     res = _shape_elems(result_shape)
-    # operand 0 name
-    ops = re.findall(r"%?([\w.\-]+)", rest.split(")", 1)[0])
+    # operand 0 name: only tokens that name parsed instructions (dtype/layout
+    # tokens like 'f32' would otherwise match when the '%' sigil is optional)
+    cand = re.findall(r"%?([\w.\-]+)", rest.split(")", 1)[0])
+    ops = [t for t in cand if t in shapes]
     contracted = 1
     mc = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", rest)
     if mc and ops:

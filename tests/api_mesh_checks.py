@@ -1,0 +1,67 @@
+"""Backend-parity checks for the unified API on 8 forced host devices
+(subprocess companion of test_api.py — jax locks the device count at first
+init, so the main pytest process cannot host these).
+
+For universal, systematic-RS, and Lagrange specs (plus the DFT transform),
+`Encoder.plan(spec, backend=b).run(x)` must return bitwise-identical sink
+values for b in {"simulator", "local", "mesh"}, under every schedule the
+planner can pick.  Also checks that a repeated plan() is a cache hit that
+reuses the compiled mesh executable.
+
+Prints 'API_MESH_CHECKS_OK' on success; any assertion failure is fatal.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+
+from repro.api import CodeSpec, Encoder
+from repro.core.field import FERMAT
+
+f = FERMAT
+rng = np.random.default_rng(42)
+
+cases = [
+    ("universal", 8, 4, ["auto", "universal"]),
+    ("universal", 8, 8, ["auto"]),
+    ("rs", 8, 4, ["auto", "universal", "rs"]),
+    ("rs", 8, 8, ["universal", "rs"]),
+    ("rs", 8, 2, ["universal", "rs"]),
+    ("lagrange", 8, 4, ["auto", "universal", "rs"]),
+    ("dft", 8, 8, ["auto"]),
+]
+for kind, K, R, methods in cases:
+    spec = CodeSpec(kind=kind, K=K, R=R, W=16,
+                    seed=9 if kind == "universal" else None)
+    x = f.rand((K, 16), rng)
+    for method in methods:
+        plans = {b: Encoder.plan(spec, backend=b, method=method)
+                 for b in ("simulator", "local", "mesh")}
+        ys = {b: p.run(x) for b, p in plans.items()}
+        ref = f.matmul(plans["local"].A.T, x)
+        for b, y in ys.items():
+            assert np.array_equal(y, ref), (kind, K, R, method, b)
+        print(f"{kind} K={K} R={R} method={plans['mesh'].method}: "
+              "simulator == local == mesh")
+
+# plan cache: repeated plan() reuses the plan AND its compiled mesh callable
+spec = CodeSpec(kind="rs", K=8, R=4, W=16)
+p1 = Encoder.plan(spec, backend="mesh")
+fn1 = p1.mesh_callable()
+p2 = Encoder.plan(spec, backend="mesh")
+assert p2 is p1 and p2.mesh_callable() is fn1, "mesh plan not cached"
+
+# explicit-matrix universal spec on the mesh grid
+A = f.rand((8, 4), rng)
+spec = CodeSpec(kind="universal", K=8, R=4)
+x = f.rand((8, 16), rng)
+ref = f.matmul(A.T, x)
+for b in ("simulator", "local", "mesh"):
+    assert np.array_equal(Encoder.plan(spec, backend=b, A=A).run(x), ref), b
+print("explicit-A universal: simulator == local == mesh")
+
+print("API_MESH_CHECKS_OK")

@@ -1,0 +1,33 @@
+"""Optional-hypothesis shim: property tests skip (instead of erroring at
+collection) when hypothesis is not installed.
+
+    from conftest_hypothesis import given, settings, st
+
+With hypothesis present these are the real objects; without it, `@given`
+turns the test into a pytest-skip and `st.*` return inert placeholders.
+"""
+from __future__ import annotations
+
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover - depends on environment
+    HAVE_HYPOTHESIS = False
+
+    def given(*_a, **_k):
+        return pytest.mark.skip(reason="hypothesis not installed")
+
+    def settings(*_a, **_k):
+        return lambda f: f
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+__all__ = ["given", "settings", "st", "HAVE_HYPOTHESIS"]

@@ -26,6 +26,7 @@ from repro.core.shardmap_exec import (
     build_universal_tables,
     mesh_dft,
     mesh_universal_a2a,
+    shard_map,
 )
 
 f = FERMAT
@@ -38,7 +39,7 @@ x = f.rand((N, W), rng).astype(np.uint32)
 def run_sharded(body, arrs: dict):
     keys = list(arrs)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P("d"),) + tuple(P("d") for _ in keys),
              out_specs=P("d"))
     def step(xb, *tb):
@@ -80,7 +81,7 @@ x_glob = jnp.asarray(y.astype(np.uint32))
 keys = ["ca", "cb"]
 
 
-@partial(jax.shard_map, mesh=mesh, in_specs=(P("d"), P("d"), P("d")), out_specs=P("d"))
+@partial(shard_map, mesh=mesh, in_specs=(P("d"), P("d"), P("d")), out_specs=P("d"))
 def inv_step(xb, ca, cb):
     return mesh_dft(xb[0], ca[0], cb[0], tdi, "d", inverse=True)[None]
 
@@ -135,7 +136,7 @@ def make_fn(t):
     arrs = t.device_arrays()
     keys = list(arrs)
 
-    @partial(jax.shard_map, mesh=mesh,
+    @partial(shard_map, mesh=mesh,
              in_specs=(P("d"),) + tuple(P("d") for _ in keys),
              out_specs=P("d"))
     def step(xb, *tb):

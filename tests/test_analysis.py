@@ -63,7 +63,9 @@ os.environ['XLA_FLAGS'] = '--xla_force_host_platform_device_count=4'
 import jax, jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.launch.hlo_cost import analyze
-mesh = jax.make_mesh((4,), ('d',), axis_types=(jax.sharding.AxisType.Auto,))
+kw = ({'axis_types': (jax.sharding.AxisType.Auto,)}
+      if hasattr(jax.sharding, 'AxisType') else {})
+mesh = jax.make_mesh((4,), ('d',), **kw)
 def g(x, w):
     return x @ w
 xs = NamedSharding(mesh, P(None, 'd'))

@@ -1,0 +1,194 @@
+"""Unified Encoder/EncodePlan API: backend parity, plan caching, auto
+method selection (the mesh backend is exercised in-process where one device
+suffices and in `api_mesh_checks.py` on 8 forced host devices)."""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import CodeSpec, Encoder, method_costs
+from repro.api.planner import _host_tables
+from repro.core.field import FERMAT
+
+REPO = Path(__file__).resolve().parent.parent
+RNG = np.random.default_rng(11)
+
+
+def _spec(kind, K, R, **kw):
+    if kind == "universal":
+        kw.setdefault("seed", 5)
+    return CodeSpec(kind=kind, K=K, R=R, **kw)
+
+
+@pytest.mark.parametrize("kind,K,R", [
+    ("universal", 16, 4), ("universal", 4, 16), ("rs", 16, 4),
+    ("rs", 8, 8), ("lagrange", 16, 4), ("dft", 8, 8),
+])
+def test_simulator_local_parity(kind, K, R):
+    spec = _spec(kind, K, R)
+    x = FERMAT.rand((K, 3), RNG)
+    ys = Encoder.plan(spec, backend="simulator").run(x)
+    yl = Encoder.plan(spec, backend="local").run(x)
+    ref = FERMAT.matmul(Encoder.plan(spec, backend="local").A.T, x)
+    assert np.array_equal(ys, ref)
+    assert np.array_equal(yl, ref)
+
+
+def test_methods_agree_on_simulator():
+    spec = CodeSpec(kind="rs", K=32, R=8)
+    x = FERMAT.rand((32, 2), RNG)
+    y_u = Encoder.plan(spec, backend="simulator", method="universal").run(x)
+    y_r = Encoder.plan(spec, backend="simulator", method="rs").run(x)
+    assert np.array_equal(y_u, y_r)
+
+
+def test_plan_cache_reuses_tables():
+    Encoder.cache_clear()
+    spec = CodeSpec(kind="rs", K=16, R=4)
+    p1 = Encoder.plan(spec, backend="simulator")
+    info = Encoder.cache_info()
+    assert info["table_misses"] == 1 and info["plan_misses"] == 1
+
+    # identical spec: plan cache hit, same plan object, no table rebuild
+    p2 = Encoder.plan(spec, backend="simulator")
+    info = Encoder.cache_info()
+    assert p2 is p1
+    assert info["plan_hits"] == 1 and info["table_misses"] == 1
+
+    # other backend / other payload width: same host tables (W-independent)
+    p3 = Encoder.plan(spec, backend="local")
+    p4 = Encoder.plan(spec.with_W(4096), backend="local")
+    assert p3.tables is p1.tables and p4.tables is p1.tables
+    assert Encoder.cache_info()["table_misses"] == 1
+
+
+def test_run_is_hot_path_no_rebuild():
+    Encoder.cache_clear()
+    plan = Encoder.plan(CodeSpec(kind="rs", K=8, R=4), backend="local")
+    before = Encoder.cache_info()
+    for _ in range(3):
+        plan.run(FERMAT.rand((8, 5), RNG))
+    after = Encoder.cache_info()
+    assert after["table_misses"] == before["table_misses"]
+    assert after["tables"] == before["tables"]
+
+
+def test_auto_picks_cost_model_argmin():
+    for spec in (CodeSpec(kind="rs", K=16, R=4, W=1),
+                 CodeSpec(kind="rs", K=128, R=128, W=1),
+                 CodeSpec(kind="rs", K=128, R=128, W=4096)):
+        # method_costs folds W into C2 (matches measured RoundNetwork.C2
+        # of a W-wide run) — totals are evaluated at W=1
+        costs = method_costs(spec, _host_tables(spec, None, None).sgrs)
+        expect = min(costs, key=lambda m: (
+            costs[m].total(Encoder.ALPHA, Encoder.BETA_BITS),
+            m == "universal"))
+        plan = Encoder.plan(spec, backend="simulator")
+        assert plan.method == expect, (spec, plan.method, expect)
+    # bandwidth-dominated regime must flip to the specific algorithm
+    assert Encoder.plan(CodeSpec(kind="rs", K=128, R=128, W=4096),
+                        backend="simulator").method == "rs"
+    assert Encoder.plan(CodeSpec(kind="rs", K=16, R=4, W=1),
+                        backend="simulator").method == "universal"
+
+
+def test_explicit_matrix_and_1d_payloads():
+    K, R = 5, 16  # no divisibility — universal schedule on explicit A
+    A = FERMAT.rand((K, R), RNG)
+    spec = CodeSpec(kind="universal", K=K, R=R)
+    ys = Encoder.plan(spec, backend="simulator", A=A).run(FERMAT.arr(np.arange(K)))
+    yl = Encoder.plan(spec, backend="local", A=A).run(FERMAT.arr(np.arange(K)))
+    ref = FERMAT.matmul(A.T, np.arange(K)[:, None])[:, 0]
+    assert ys.shape == (R,) and np.array_equal(ys, ref)
+    assert np.array_equal(yl, ref)
+    # distinct matrices of the same spec must not collide in the cache
+    A2 = FERMAT.rand((K, R), RNG)
+    y2 = Encoder.plan(spec, backend="local", A=A2).run(FERMAT.arr(np.arange(K)))
+    assert not np.array_equal(y2, ref)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        CodeSpec(kind="nope", K=4, R=4)
+    with pytest.raises(ValueError):
+        CodeSpec(kind="dft", K=6, R=6)  # not a power of P
+    with pytest.raises(ValueError):
+        CodeSpec(kind="dft", K=8, R=4)  # dft is square
+    with pytest.raises(ValueError):
+        Encoder.plan(CodeSpec(kind="universal", K=4, R=4), backend="local")
+    with pytest.raises(ValueError):
+        Encoder.plan(CodeSpec(kind="rs", K=8, R=4), backend="warp-drive")
+    with pytest.raises(ValueError):  # rs derives A itself
+        Encoder.plan(CodeSpec(kind="rs", K=8, R=4), A=FERMAT.rand((8, 4), RNG))
+    with pytest.raises(ValueError):  # uint32 kernels are Fermat-only
+        Encoder.plan(CodeSpec(kind="rs", K=8, R=4, q=7681), backend="local")
+
+
+def test_non_fermat_field_stays_exact():
+    """q != 65537 runs on the simulator oracle (kernel backends refuse)."""
+    from repro.core.field import Field
+
+    f = Field(7681)
+    spec = CodeSpec(kind="rs", K=8, R=4, q=7681)
+    x = f.rand((8, 2), RNG)
+    plan = Encoder.plan(spec, backend="simulator")
+    assert np.array_equal(plan.run(x), f.matmul(plan.A.T, x))
+
+
+def test_describe_mentions_selection():
+    plan = Encoder.plan(CodeSpec(kind="rs", K=16, R=4), backend="simulator")
+    text = plan.describe()
+    assert "rs" in text and "simulator" in text and str(plan.cost().C1) in text
+
+
+def test_simulator_records_network_costs():
+    from repro.core.prepare_shoot import cost_universal
+
+    spec = CodeSpec(kind="universal", K=8, R=8, seed=1)
+    plan = Encoder.plan(spec, backend="simulator")
+    plan.run(FERMAT.rand((8, 1), RNG))
+    assert plan.sim_net is not None and plan.sim_net.C1 > 0
+    # single square block: phase-1 A2A matches Thm. 3 exactly
+    c1_a2a, _ = cost_universal(8, 1)
+    assert plan.sim_net.C1 >= c1_a2a
+
+
+def test_gradient_coder_plan_matches_matrix():
+    from repro.coding import GradientCoder
+
+    coder = GradientCoder(n_workers=8, s=1)
+    parts = FERMAT.rand((8, 3), RNG)
+    plan = coder.encode_plan()
+    got = plan.run(parts)
+    B = coder.encode_matrix().astype(np.int64)
+    assert np.array_equal(got, FERMAT.matmul(B, parts))
+
+
+def test_lagrange_computer_routes_through_api():
+    from repro.coding import LagrangeComputer
+
+    lcc = LagrangeComputer.build(FERMAT, K=5, N=16)
+    x = FERMAT.rand((5, 4), RNG)
+    coded = lcc.encode(x)
+    from repro.core.matrices import lagrange_matrix
+
+    L = lagrange_matrix(FERMAT, lcc.alphas, lcc.betas)
+    assert np.array_equal(coded, FERMAT.matmul(L.T, x))
+    assert lcc.encode_plan() is lcc.encode_plan()  # memoized
+
+
+@pytest.mark.slow
+def test_backend_parity_subprocess_8_devices():
+    """simulator == local == mesh bitwise, on 8 forced host devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "api_mesh_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "API_MESH_CHECKS_OK" in proc.stdout

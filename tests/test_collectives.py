@@ -1,7 +1,7 @@
 """Broadcast/reduce primitives (Defs. 2-3, App. A) and structured points."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest_hypothesis import given, settings, st
 
 from repro.core import FERMAT, RoundNetwork
 from repro.core.collectives import broadcast, cost_broadcast, reduce

@@ -1,7 +1,8 @@
 """Field arithmetic: numpy oracle path, jnp Fermat uint32 path, packing."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest_hypothesis import given, settings, st
 
 from repro.core.field import (
     FERMAT,

@@ -1,7 +1,8 @@
 """Sec. III framework + Sec. VI RS method + Appendix B, end-to-end."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from conftest_hypothesis import given, settings, st
 
 from repro.core import FERMAT, RoundNetwork, decentralized_encode, nonsystematic_encode
 from repro.core.cauchy import StructuredGRS, cauchy_a2a, cost_cauchy

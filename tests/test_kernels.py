@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 import jax.numpy as jnp
-from hypothesis import given, settings, strategies as st
+from conftest_hypothesis import given, settings, st
 
 from repro.core.field import FERMAT, FERMAT_Q
 from repro.kernels.gf_matmul import gf_matmul

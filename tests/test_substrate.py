@@ -6,7 +6,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from conftest_hypothesis import given, settings, st
 
 from repro.ckpt import CodedCheckpointer
 from repro.coding import GradientCoder, LagrangeComputer, coded_gradient
