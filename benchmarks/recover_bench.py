@@ -1,0 +1,62 @@
+"""Decode vs encode cost — the recovery half of the coded pipeline.
+
+Two families of rows:
+
+  recover/decode_local_*  — wall time of the cached-`DecodePlan` kernel hot
+                            path (Pallas/jnp `decode_blocks`) vs the matching
+                            encode (`EncodePlan` local backend) on the same
+                            (K, R, W); derived carries the encode us and the
+                            decode:encode ratio
+  recover/decode_model_*  — the simulator's closed-form network costs
+                            (C1 rounds, C2 elems/port, exact per
+                            `repro.recover.decode_cost`) next to the encode
+                            plan's Table-I model cost for the same spec
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import CodeSpec, Encoder
+from repro.core.field import FERMAT
+from repro.recover import Decoder
+
+
+def _time(fn, reps: int = 5) -> float:
+    fn()  # warm (compile / plan-cache fill)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows() -> list[str]:
+    rng = np.random.default_rng(17)
+    out = []
+    for K, R, n_erased, W in [(16, 4, 4, 4096), (32, 8, 8, 4096),
+                              (64, 16, 8, 16384)]:
+        spec = CodeSpec(kind="rs", K=K, R=R, W=W)
+        x = FERMAT.rand((K, W), rng)
+        enc = Encoder.plan(spec, backend="local")
+        parity = enc.run(x)
+        cw = np.concatenate([x % FERMAT.q, parity])
+        erased = tuple(range(0, 2 * n_erased, 2))[:n_erased]  # data shards
+        dec = Decoder.plan(spec, erased=erased, backend="local")
+        v = cw[list(dec.kept)]
+
+        us_enc = _time(lambda: enc.run(x))
+        us_dec = _time(lambda: dec.run(v))
+        us_data = _time(lambda: dec.data(v))
+        out.append(
+            f"recover/decode_local_K{K}_R{R}_E{n_erased}_W{W},{us_dec:.0f},"
+            f"encode_us={us_enc:.0f};data_us={us_data:.0f};"
+            f"ratio={us_dec / max(us_enc, 1e-9):.2f}")
+
+        c_dec = dec.cost()  # decode_cost with the spec's W folded into C2
+        c_enc = enc.cost()  # Table-I model, W likewise folded
+        model_us = c_dec.total(Decoder.ALPHA, Decoder.BETA_BITS) * 1e6
+        out.append(
+            f"recover/decode_model_K{K}_R{R}_E{n_erased},{model_us:.1f},"
+            f"C1={c_dec.C1};C2={c_dec.C2};enc_C1={c_enc.C1};enc_C2={c_enc.C2}")
+    return out

@@ -1,51 +1,121 @@
 """Benchmark driver — one section per paper table/claim.
 
-Prints ``name,us_per_call,derived`` CSV.  Sections:
+Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
+writes the machine-readable ``{name: us_per_call}`` map (the CI artifact —
+e.g. ``--json BENCH_recover.json`` with ``--sections recover``).  Sections:
+
   table1/*       — Table I: universal / DFT / Vandermonde A2A costs vs theory
   multireduce/*  — Sec. II comparison vs Jeong et al. [21] + strawman
   framework/*    — Thm. 1/2/7/9 end-to-end decentralized encoding costs
   kernel/*       — Pallas gf_matmul micro-bench (interpret mode)
+  recover/*      — decode vs encode: DecodePlan kernel hot path + closed-form
+                   network costs (the repair half of the pipeline)
   mesh_encode/*  — lowered-HLO collective bytes, universal vs RS (subprocess)
+  mesh_a2a/*     — mesh A2A scaling (subprocess)
   roofline/*     — dry-run roofline cells, if results/dryrun exists
+
+``--sections table1 recover ...`` restricts the run to the named sections.
 """
 from __future__ import annotations
 
+import argparse
+import json
 import os
 import subprocess
 import sys
 from pathlib import Path
 
-sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+_REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(_REPO / "src"))
+sys.path.insert(0, str(_REPO))  # `benchmarks` namespace package, any cwd
+
+
+def _emit(row: str, acc: dict[str, float]) -> None:
+    print(row, flush=True)
+    parts = row.split(",")
+    if len(parts) >= 2:
+        try:
+            acc[parts[0]] = float(parts[1])
+        except ValueError:
+            pass
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write {name: us_per_call} JSON to PATH")
+    ap.add_argument("--sections", nargs="+", default=None,
+                    help="run only the named sections (default: all)")
+    args = ap.parse_args()
+
+    from benchmarks import (framework_costs, kernel_bench,
+                            multireduce_compare, recover_bench, table1_costs)
+
+    inproc = {
+        "table1": table1_costs,
+        "multireduce": multireduce_compare,
+        "framework": framework_costs,
+        "kernel": kernel_bench,
+        "recover": recover_bench,
+    }
+    subproc = {
+        "mesh_encode": ("mesh_encode_bench.py", "mesh_encode/"),
+        "mesh_a2a": ("mesh_a2a_scale.py", "mesh_a2a/"),
+    }
+    wanted = args.sections
+    if wanted is not None:
+        unknown = set(wanted) - set(inproc) - set(subproc) - {"roofline"}
+        if unknown:
+            raise SystemExit(f"unknown sections: {sorted(unknown)} "
+                             f"(have {sorted(inproc) + sorted(subproc) + ['roofline']})")
+
+    def on(name: str) -> bool:
+        return wanted is None or name in wanted
+
+    acc: dict[str, float] = {}
+    failed: list[str] = []
     print("name,us_per_call,derived")
-    from benchmarks import framework_costs, kernel_bench, multireduce_compare, table1_costs
+    for name, mod in inproc.items():
+        if on(name):
+            for row in mod.rows():
+                _emit(row, acc)
 
-    for mod in (table1_costs, multireduce_compare, framework_costs, kernel_bench):
-        for row in mod.rows():
-            print(row, flush=True)
-
-    # mesh bench needs its own process (8 forced host devices)
+    # mesh benches need their own process (8 forced host devices)
     env = dict(os.environ)
     env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
     env.pop("XLA_FLAGS", None)
-    for script, prefix in [("mesh_encode_bench.py", "mesh_encode/"),
-                           ("mesh_a2a_scale.py", "mesh_a2a/")]:
+    for name, (script, prefix) in subproc.items():
+        if not on(name):
+            continue
         proc = subprocess.run(
             [sys.executable, str(Path(__file__).resolve().parent / script)],
             capture_output=True, text=True, env=env, timeout=1200)
         for line in proc.stdout.splitlines():
             if line.startswith(prefix):
-                print(line, flush=True)
+                _emit(line, acc)
         if proc.returncode != 0:
+            # failure is visible in the CSV and fails the run; it is NOT
+            # recorded in the JSON artifact as a fake 0us measurement
             print(f"{prefix}FAILED,0,rc={proc.returncode}", flush=True)
+            failed.append(name)
 
-    from benchmarks import roofline
+    if on("roofline"):
+        if (_REPO / "results" / "dryrun").exists():
+            from benchmarks import roofline
 
-    if Path("results/dryrun").exists():
-        for row in roofline.rows():
-            print(row, flush=True)
+            for row in roofline.rows():
+                _emit(row, acc)
+        elif wanted is not None:
+            # explicitly requested but unrunnable: fail loudly, don't write
+            # an empty artifact
+            raise SystemExit("--sections roofline needs results/dryrun "
+                             "(run repro.launch.dryrun first)")
+
+    if args.json:
+        Path(args.json).write_text(json.dumps(acc, indent=2, sort_keys=True))
+        print(f"wrote {len(acc)} entries to {args.json}", file=sys.stderr)
+    if failed:
+        raise SystemExit(f"benchmark subprocesses failed: {failed}")
 
 
 if __name__ == "__main__":

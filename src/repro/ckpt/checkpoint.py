@@ -14,10 +14,12 @@ produced *in-network* by `core.parity.mesh_parity_encode` along the data
 axis (no central encoder); here the host-side `encode_parity` reuses the
 same StructuredGRS code so restore logic is identical.
 
-Restore tolerates up to R missing/corrupt shards (any-N-of-(N+R) MDS
-property, validated in tests) and supports **elastic resharding**: a
-checkpoint written with N shards restores onto any N' (the flat symbol
-stream is re-split).
+Restore tolerates up to R missing shards (any-N-of-(N+R) MDS property,
+validated in tests): shard/parity files missing from disk are detected and
+decoded around automatically via `repro.recover.Decoder` (degraded read —
+the same `DecodePlan` the survivors would execute in-network).  Elastic
+resharding is supported: a checkpoint written with N shards restores onto
+any N' (the flat symbol stream is re-split).
 
 Async: `save(..., background=True)` hands the write to a daemon thread —
 training continues; `wait()` joins before the next save (single-writer).
@@ -38,7 +40,7 @@ import numpy as np
 
 from ..api import CodeSpec, Encoder
 from ..core.field import FERMAT, bytes_to_symbols, symbols_to_bytes
-from ..core.parity import reconstruct
+from ..recover import Decoder
 
 
 # ---------------------------------------------------------------------------
@@ -176,30 +178,51 @@ class CodedCheckpointer:
 
     def restore(self, step: int, example_state: Any,
                 failed_shards: set[int] = frozenset()) -> Any:
-        """Restore, reconstructing up to R missing data shards from parity.
+        """Restore, reconstructing up to R erased shards via the decode
+        subsystem (`repro.recover.Decoder`).
 
-        failed_shards simulates node failures (indices into [0, N))."""
+        Degraded reads are automatic: shard/parity files missing from disk
+        count as erasures, in addition to the explicitly `failed_shards`
+        (simulated node failures, indices into [0, N)).  The restore
+        succeeds as long as data + parity erasures total at most R."""
         d = Path(self.directory) / f"step_{step:06d}"
         meta = json.loads((d / "meta.json").read_text())
         N, R = meta["N"], meta["R"]
-        assert len(failed_shards) <= R, "more failures than parity can cover"
-        L = None
-        avail: dict[int, np.ndarray] = {}
+        erased = {int(k) for k in failed_shards}
         for k in range(N):
-            if k in failed_shards:
-                continue
-            avail[k] = np.load(d / f"shard_{k:03d}.npy").astype(np.int64)
-            L = avail[k].size
-        if failed_shards:
-            for r in range(R):
-                if len(avail) >= N:
-                    break
-                avail[N + r] = np.load(d / f"parity_{r:03d}.npy").astype(np.int64)
-            kept = np.array(sorted(avail)[:N])
-            vals = np.stack([avail[i] for i in kept])
-            shards = reconstruct(self.field, self.sgrs, kept, vals)
+            if k not in erased and not (d / f"shard_{k:03d}.npy").exists():
+                erased.add(k)
+        for r in range(R):
+            if not (d / f"parity_{r:03d}.npy").exists():
+                erased.add(N + r)
+
+        loaded: dict[int, np.ndarray] = {}
+
+        def _load(idx: int) -> np.ndarray:
+            if idx not in loaded:
+                name = (f"shard_{idx:03d}.npy" if idx < N
+                        else f"parity_{idx - N:03d}.npy")
+                loaded[idx] = np.load(d / name).astype(np.int64)
+            return loaded[idx]
+
+        if any(e < N for e in erased):
+            assert len(erased) <= R, "more failures than parity can cover"
+            spec = CodeSpec(kind="rs", K=N, R=R,
+                            q=int(meta.get("q", self.field.q)))
+            plan = Decoder.plan(
+                spec, erased=tuple(sorted(erased)),
+                backend="local" if spec.q == FERMAT.q else "simulator")
+            # repair only the |E| lost columns (K x |E| work) instead of
+            # re-deriving all K data shards through the full K x K solve;
+            # repaired rows for missing *parity* files ride along unused
+            # (they must be in `erased` so plan.kept avoids them — at most
+            # R-1 extra columns, still far below the K-column full solve)
+            repaired = plan.run(np.stack([_load(i) for i in plan.kept]))
+            rep = {e: repaired[i] for i, e in enumerate(plan.erased)}
+            shards = np.stack([rep[k] if k in rep else _load(k)
+                               for k in range(N)])
         else:
-            shards = np.stack([avail[k] for k in range(N)])
+            shards = np.stack([_load(k) for k in range(N)])
         sym = shards.reshape(-1)[: -(-meta["nbytes"] // 2)]
         raw = symbols_to_bytes(sym, meta["nbytes"])
         return bytes_to_tree(raw, meta, example_state)

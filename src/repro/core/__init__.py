@@ -31,7 +31,7 @@ Legacy direct call sites (`decentralized_encode(...)`,
 selects algorithms; prefer it in new code.
 """
 from .field import FERMAT, FERMAT_Q, Field
-from .simulator import Msg, RoundNetwork, run_lockstep
+from .simulator import FailedProcessorError, Msg, RoundNetwork, run_lockstep
 from .prepare_shoot import cost_universal, prepare_shoot, universal_a2a
 from .dft_a2a import cost_dft, dft_a2a
 from .draw_loose import cost_draw_loose, draw_loose
@@ -50,7 +50,8 @@ from .framework import decentralized_encode, nonsystematic_encode
 from . import cost_model
 
 __all__ = [
-    "FERMAT", "FERMAT_Q", "Field", "Msg", "RoundNetwork", "run_lockstep",
+    "FERMAT", "FERMAT_Q", "Field", "FailedProcessorError", "Msg",
+    "RoundNetwork", "run_lockstep",
     "prepare_shoot", "universal_a2a", "cost_universal",
     "dft_a2a", "cost_dft", "draw_loose", "cost_draw_loose",
     "StructuredPoints", "SystematicGRS", "StructuredGRSCode",

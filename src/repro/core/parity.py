@@ -25,7 +25,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .cauchy import StructuredGRS
-from .field import Field, fermat_add, fermat_mul
+from .field import FERMAT_Q, Field, fermat_add, fermat_mul
 from .shardmap_exec import (
     DFTTables,
     DrawLooseTables,
@@ -240,9 +240,19 @@ def mesh_parity_encode(x, rows: dict, t: ParityTables, axis_name: str):
 
 
 def reconstruct(field: Field, sgrs: StructuredGRS, kept: np.ndarray, vals: np.ndarray) -> np.ndarray:
-    """Any-K-of-N decode: kept (K,) codeword indices, vals (K, W) symbols."""
+    """Any-K-of-N decode: kept (K,) codeword indices, vals (K, W) symbols.
+
+    For the Fermat field the solve runs on the `kernels.gf_solve` path
+    (uint32 Gauss-Jordan inverse + Pallas/jnp matmul application); other
+    fields keep the exact numpy host path.  Both are exact mod q, so the
+    result is bitwise identical either way.
+    """
     K = sgrs.K
     A = sgrs.grs.A_direct()
     G = np.concatenate([np.eye(K, dtype=np.int64), A], axis=1)
     sub = G[:, kept]  # K x K
+    if field.q == FERMAT_Q:
+        from ..kernels.gf_solve import gf_solve
+
+        return np.asarray(gf_solve(sub.T % FERMAT_Q, field.arr(vals)), np.int64)
     return field.matmul(gauss_inverse(field, sub.T), field.arr(vals))

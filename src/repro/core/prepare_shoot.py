@@ -176,3 +176,34 @@ def cost_universal(K: int, p: int) -> tuple[int, int]:
     c2_prep = ((p + 1) ** T_p - 1) // p
     c2_shoot = ((p + 1) ** T_s - 1) // p
     return L, c2_prep + c2_shoot
+
+
+def cost_universal_exact(K: int, p: int) -> tuple[int, int]:
+    """Exact measured (C1, C2) of `prepare_shoot`, round by round (W=1).
+
+    Thm. 3 (`cost_universal`) counts the shoot phase at its worst case
+    n = (p+1)^T_s targets per processor; when K is not a power of p+1 the
+    actual n = ceil(K/m) is smaller, some shoot rounds carry fewer (or no)
+    packets, and the simulator measures strictly less.  This closed form
+    reproduces the schedule's counts exactly: shoot round t moves, from
+    each sender, one packet per alive target index j with
+    j mod (p+1)^t = rho*(p+1)^(t-1); a round with no such j never hits the
+    network.  Used by the decode cost model, which is asserted *equal* to
+    the measured RoundNetwork counts.
+    """
+    if K <= 1:
+        return 0, 0
+    L, T_p, T_s, m = phase_split(K, p)
+    n = math.ceil(K / m)
+    c1 = T_p
+    c2 = ((p + 1) ** T_p - 1) // p
+    for t in range(1, T_s + 1):
+        blk = (p + 1) ** t
+        sub = (p + 1) ** (t - 1)
+        m_t = max(
+            sum(1 for j in range(n) if j % blk == rho * sub)
+            for rho in range(1, p + 1))
+        if m_t:
+            c1 += 1
+            c2 += m_t
+    return c1, c2

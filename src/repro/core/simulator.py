@@ -36,22 +36,47 @@ class Msg:
         assert self.n_elems >= 1
 
 
+class FailedProcessorError(RuntimeError):
+    """A schedule tried to route traffic through an erased processor."""
+
+
 @dataclass
 class RoundNetwork:
-    """Validates port constraints and accumulates C1/C2 across schedules."""
+    """Validates port constraints and accumulates C1/C2 across schedules.
+
+    `keep_log` enables the per-round (n_msgs, m_t) trace on `round_log`;
+    it is off by default so long simulations don't grow memory per round.
+    `fail(procs)` erases processors: they may neither send nor receive, and
+    any schedule touching them raises `FailedProcessorError` — repair
+    schedules must route around the erasure set (Sec. I fault model).
+    """
 
     n_procs: int
     p: int = 1
+    keep_log: bool = False
     C1: int = 0
     C2: int = 0
     total_elems: int = 0
     round_log: list = dc_field(default_factory=list)
+    failed: set = dc_field(default_factory=set)
+
+    def fail(self, procs) -> None:
+        """Mark processors as erased (no sends, no receives, ever after)."""
+        procs = {int(q) for q in procs}
+        bad = [q for q in procs if not 0 <= q < self.n_procs]
+        assert not bad, f"cannot fail out-of-range processors {bad}"
+        self.failed |= procs
 
     def _account(self, msgs: list[Msg]) -> None:
         sends: dict[int, int] = {}
         recvs: dict[int, int] = {}
         for m in msgs:
             assert 0 <= m.src < self.n_procs and 0 <= m.dst < self.n_procs
+            if m.src in self.failed or m.dst in self.failed:
+                dead = m.src if m.src in self.failed else m.dst
+                raise FailedProcessorError(
+                    f"round {self.C1}: message {m.src}->{m.dst} touches "
+                    f"failed processor {dead}")
             sends[m.src] = sends.get(m.src, 0) + 1
             recvs[m.dst] = recvs.get(m.dst, 0) + 1
         over_s = {k: v for k, v in sends.items() if v > self.p}
@@ -62,7 +87,8 @@ class RoundNetwork:
         self.C1 += 1
         self.C2 += m_t
         self.total_elems += sum(m.n_elems for m in msgs)
-        self.round_log.append((len(msgs), m_t))
+        if self.keep_log:
+            self.round_log.append((len(msgs), m_t))
 
     def run(self, *schedules) -> None:
         """Advance all schedules in lockstep until all are exhausted.

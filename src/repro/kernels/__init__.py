@@ -1,5 +1,6 @@
 from .gf_matmul import gf_matmul
+from .gf_solve import gf_gauss_inverse, gf_solve
 from .ref import gf_matmul_ref
 from . import ops
 
-__all__ = ["gf_matmul", "gf_matmul_ref", "ops"]
+__all__ = ["gf_matmul", "gf_gauss_inverse", "gf_solve", "gf_matmul_ref", "ops"]

@@ -28,6 +28,18 @@ def encode_blocks(x: jnp.ndarray, coeffs: jnp.ndarray, *, interpret: bool = True
     return gf_matmul_ref(a, b)
 
 
+def decode_blocks(v: jnp.ndarray, dmat: jnp.ndarray, *, interpret: bool = True) -> jnp.ndarray:
+    """Apply a precomputed decode matrix to survivor payloads.
+
+    v: (K, W) survivor symbols, dmat: (K, E) — returns (E, W) = dmat.T @ v
+    over F_65537.  The exact dual of `encode_blocks`: decode of an erasure
+    pattern is an encode with the repair matrix D = S^-1 G[:, E] (S the
+    survivor submatrix), so the same Pallas/jnp kernel serves both hot
+    paths; `kernels.gf_solve` builds D's ingredients.
+    """
+    return encode_blocks(v, dmat, interpret=interpret)
+
+
 @jax.jit
 def field_matmul_small(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
     return gf_matmul_ref(a.astype(jnp.uint32), b.astype(jnp.uint32))

@@ -8,20 +8,23 @@ decode_32k / long_500k dry-run cells).
 unified encoding API before serving: shard, RS-parity-encode
 (`Encoder.plan(..., backend="local")`), drop R shards, reconstruct, and
 verify bitwise — the integrity gate a coded parameter store performs on
-startup."""
+startup.  With `--degraded` the recovery leg runs through the decode
+subsystem (`repro.recover.Decoder`) instead of the host-side solve: the
+same cached `DecodePlan` a degraded read would execute, exercising the
+repair matrix + Pallas kernel path end to end."""
 from __future__ import annotations
 
 import argparse
 import time
 
 
-def _coded_selfcheck(params, n_shards: int, n_parity: int) -> None:
+def _coded_selfcheck(params, n_shards: int, n_parity: int,
+                     degraded: bool = False) -> None:
     import numpy as np
 
     from ..api import CodeSpec, Encoder
     from ..ckpt.checkpoint import tree_to_bytes
     from ..core.field import FERMAT, bytes_to_symbols
-    from ..core.parity import reconstruct
 
     if n_shards % n_parity:
         raise SystemExit(
@@ -34,18 +37,33 @@ def _coded_selfcheck(params, n_shards: int, n_parity: int) -> None:
         [sym, np.zeros(n_shards * L - sym.size, np.int64)]
     ).reshape(n_shards, L)
 
-    plan = Encoder.plan(CodeSpec(kind="rs", K=n_shards, R=n_parity),
-                        backend="local")
+    spec = CodeSpec(kind="rs", K=n_shards, R=n_parity)
+    plan = Encoder.plan(spec, backend="local")
     parity = plan.run(shards)
     print(plan.describe())
 
     # worst case: the first R data shards are lost; recover from parity
     full = np.concatenate([shards, parity])
-    kept = np.arange(n_parity, n_shards + n_parity)
-    rec = reconstruct(FERMAT, plan.sgrs, kept, full[kept])
+    erased = tuple(range(n_parity))
+    if degraded:
+        from ..recover import Decoder
+
+        dplan = Decoder.plan(spec, erased=erased, backend="local")
+        print(dplan.describe())
+        v = full[list(dplan.kept)]
+        repaired = dplan.run(v)
+        assert np.array_equal(repaired, shards[: n_parity]), \
+            "degraded self-check failed (repair)"
+        rec = dplan.data(v)
+    else:
+        from ..core.parity import reconstruct
+
+        kept = np.arange(n_parity, n_shards + n_parity)
+        rec = reconstruct(FERMAT, plan.sgrs, kept, full[kept])
     assert np.array_equal(rec, shards), "coded self-check failed"
-    print(f"coded self-check OK: {n_shards} param shards + {n_parity} parity, "
-          f"recovered {n_parity} lost shards bitwise")
+    mode = "degraded DecodePlan" if degraded else "host solve"
+    print(f"coded self-check OK ({mode}): {n_shards} param shards + "
+          f"{n_parity} parity, recovered {n_parity} lost shards bitwise")
 
 
 def main():
@@ -56,9 +74,14 @@ def main():
     ap.add_argument("--gen-len", type=int, default=32)
     ap.add_argument("--coded-selfcheck", action="store_true",
                     help="verify params survive R lost shards via RS parity")
+    ap.add_argument("--degraded", action="store_true",
+                    help="recover the self-check erasures via the decode "
+                         "subsystem (DecodePlan) instead of the host solve")
     ap.add_argument("--coded-shards", type=int, default=8)
     ap.add_argument("--coded-parity", type=int, default=2)
     args = ap.parse_args()
+    if args.degraded and not args.coded_selfcheck:
+        ap.error("--degraded modifies the self-check; pass --coded-selfcheck")
 
     import jax
     import jax.numpy as jnp
@@ -70,7 +93,7 @@ def main():
     params = M.init_params(cfg, jax.random.PRNGKey(0))
     if args.coded_selfcheck:
         _coded_selfcheck(jax.device_get(params), args.coded_shards,
-                         args.coded_parity)
+                         args.coded_parity, degraded=args.degraded)
     B = args.batch
     prompt = jax.random.randint(jax.random.PRNGKey(1), (B, args.prompt_len),
                                 0, cfg.vocab)

@@ -1,0 +1,28 @@
+"""Decentralized decode & repair: the recovery dual of `repro.api`.
+
+    from repro.api import CodeSpec
+    from repro.recover import Decoder
+
+    spec = CodeSpec(kind="rs", K=16, R=4)
+    plan = Decoder.plan(spec, erased=(2, 17), backend="simulator")
+    lost = plan.run(v)       # v: symbols at plan.kept -> symbols at plan.erased
+    x    = plan.data(v)      # full original data (degraded read)
+
+Erasure decode of the systematic codeword [x | x^T A] dualizes to an
+all-to-all *encode* among the >= K survivors with the repair matrix
+D = S^-1 G[:, E] (S the survivor submatrix of G = [I | A]) — so the same
+three backends execute it with bitwise-identical results: `"simulator"`
+(RoundNetwork with the erased processors `fail()`-ed; measured C1/C2),
+`"mesh"` (shard_map/ppermute over survivor devices), `"local"`
+(Pallas/jnp `decode_blocks` kernel).  Host tables — submatrix inverse,
+repair matrix, batch blocks, compiled mesh executables — are cached per
+(spec, erasure pattern); see `planner` for the cache contract and
+`engine` for the round-network schedule and its exact closed-form cost.
+"""
+from .engine import decentralized_decode, decode_batches, decode_cost
+from .planner import DecodePlan, Decoder, UndecodableError
+
+__all__ = [
+    "Decoder", "DecodePlan", "UndecodableError",
+    "decentralized_decode", "decode_batches", "decode_cost",
+]

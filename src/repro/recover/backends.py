@@ -1,0 +1,107 @@
+"""The three interchangeable executors behind `DecodePlan.run`.
+
+    simulator — all-to-all decode among the K kept survivors on the
+                round network, with the erased processors fail()-ed
+                (exact numpy oracle; measured C1/C2 on `plan.sim_net`)
+    mesh      — devices-as-survivors shard_map execution: device i holds
+                the symbol of survivor `plan.kept[i]`; each batch of
+                repair columns runs the same universal mesh A2A as the
+                encode path, with the repaired symbols landing on devices
+                0..E'-1
+    local     — single-device `kernels.ops.decode_blocks` (Pallas/jnp)
+
+All three return the erased symbols bitwise-equal: row j holds
+v^T D[:, j] over F_q for erased position `plan.erased[j]`.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import numpy as np
+
+from ..core.simulator import RoundNetwork
+from .engine import decentralized_decode
+
+
+def run_simulator(plan, v: np.ndarray) -> np.ndarray:
+    """Decode on the paper's p-port round network: the erased processors
+    are failed (any schedule touching them would raise), and the network
+    (with measured C1/C2) is kept on `plan.sim_net`."""
+    spec, f = plan.spec, plan.field
+    net = RoundNetwork(spec.N, spec.p)
+    net.fail(plan.erased)
+    y, net = decentralized_decode(f, plan.tables.D, f.arr(v),
+                                  list(plan.kept), spec.p, net)
+    plan.sim_net = net
+    return np.asarray(y, np.int64)
+
+
+def run_local(plan, v: np.ndarray) -> np.ndarray:
+    """Single-device decode on the Pallas/jnp kernel path (no network)."""
+    import jax.numpy as jnp
+
+    from ..kernels.ops import decode_blocks
+
+    q = plan.field.q
+    v32 = jnp.asarray(np.asarray(v) % q, jnp.uint32)
+    y = decode_blocks(v32, jnp.asarray(plan.tables.D % q, jnp.uint32))
+    return np.asarray(y, np.int64)
+
+
+def _mesh_callables(plan) -> list:
+    """One jitted shard_map executable per repair batch, kept for the
+    plan's lifetime (same caching contract as `EncodePlan.mesh_callable`).
+
+    Each executable maps the global (K, W) uint32 survivor array (device i
+    <-> survivor `plan.kept[i]`) to a (K, W) array whose rows 0..E'-1 hold
+    the batch's repaired symbols.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ..api.backends import _require_devices
+    from ..core.parity import mesh_parity_encode
+    from ..core.shardmap_exec import shard_map
+
+    if plan._mesh_fns is not None:
+        return plan._mesh_fns
+
+    spec = plan.spec
+    devs = _require_devices(spec.K)
+    mesh = Mesh(np.array(devs), ("dec",))
+
+    def _batch_fn(t):
+        arrs = t.device_arrays()
+        keys = list(arrs)
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(P("dec"),) + tuple(P("dec") for _ in keys),
+                 out_specs=P("dec"))
+        def step(xb, *tb):
+            rows = {k: a[0] for k, a in zip(keys, tb)}
+            return mesh_parity_encode(xb[0], rows, t, "dec")[None]
+
+        args = tuple(jnp.asarray(arrs[k]) for k in keys)
+        return jax.jit(lambda xg: step(xg, *args))
+
+    fns = [_batch_fn(plan.tables.mesh_tables(b))
+           for b in range(len(plan.tables.batches()))]
+    plan._mesh_fns = fns
+    return fns
+
+
+def run_mesh(plan, v: np.ndarray) -> np.ndarray:
+    import jax.numpy as jnp
+
+    q = plan.field.q
+    vg = jnp.asarray(np.asarray(v) % q, jnp.uint32)
+    out = []
+    for fn, (eb, _) in zip(_mesh_callables(plan), plan.tables.batches()):
+        y = np.asarray(fn(vg), np.int64)
+        out.append(y[:eb])
+    return np.concatenate(out, axis=0)
+
+
+DRUNNERS = {"simulator": run_simulator, "local": run_local, "mesh": run_mesh}
+DBACKENDS = tuple(DRUNNERS)

@@ -1,0 +1,86 @@
+"""Decode backend-parity checks on 8 forced host devices (subprocess
+companion of test_recover.py — jax locks the device count at first init).
+
+For every code kind, `Decoder.plan(spec, erased=E, backend=b).run(v)` must
+return bitwise-identical repaired symbols for b in {"simulator", "local",
+"mesh"}, and exactly invert the encode.  Also runs the degraded checkpoint
+read end-to-end on the 8-device topology: save with N=8 data shards,
+delete R shard files from disk, restore bitwise.
+
+Prints 'RECOVER_MESH_CHECKS_OK' on success; any assertion failure is fatal.
+"""
+import os
+import tempfile
+from pathlib import Path
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+
+from repro.api import CodeSpec, Encoder
+from repro.core.field import FERMAT
+from repro.recover import Decoder, decode_cost
+
+f = FERMAT
+rng = np.random.default_rng(12)
+
+cases = [
+    ("universal", 8, 4, [(3,), (0, 9), (0, 1, 2, 3), (8, 9, 10, 11)]),
+    ("rs", 8, 4, [(2, 11), (4, 5, 6, 7), (0, 3, 8, 10)]),
+    ("rs", 8, 8, [(0, 2, 4, 6, 8, 10, 12, 14), tuple(range(8))]),
+    ("lagrange", 8, 4, [(1, 10, 11)]),
+    ("dft", 8, 8, [(0,), (5, 9, 13)]),
+]
+for kind, K, R, patterns in cases:
+    spec = CodeSpec(kind=kind, K=K, R=R, W=16,
+                    seed=9 if kind == "universal" else None)
+    x = f.rand((K, 16), rng)
+    cw = np.concatenate([x % f.q, Encoder.plan(spec, backend="local").run(x)])
+    for erased in patterns:
+        plans = {b: Decoder.plan(spec, erased=erased, backend=b)
+                 for b in ("simulator", "local", "mesh")}
+        v = cw[list(plans["mesh"].kept)]
+        ys = {b: p.run(v) for b, p in plans.items()}
+        for b, y in ys.items():
+            assert np.array_equal(y, cw[list(erased)]), (kind, erased, b)
+        c = decode_cost(K, len(erased), spec.p)
+        net = plans["simulator"].sim_net
+        assert (net.C1, net.C2) == (c.C1, c.C2 * 16), (kind, erased)
+        print(f"{kind} K={K} R={R} erased={erased}: "
+              "simulator == local == mesh, C1/C2 exact")
+
+# repeated plan() reuses the plan AND its compiled mesh executables
+from repro.recover.backends import _mesh_callables
+
+spec = CodeSpec(kind="rs", K=8, R=4, W=16)
+p1 = Decoder.plan(spec, erased=(0, 9), backend="mesh")
+fns = _mesh_callables(p1)
+p2 = Decoder.plan(spec, erased=(9, 0), backend="mesh")
+assert p2 is p1 and _mesh_callables(p2) is fns, "mesh decode plan not cached"
+print("mesh decode plan cache OK")
+
+# degraded checkpoint restore on the 8-device topology
+import jax
+
+from repro.ckpt import CodedCheckpointer
+
+assert len(jax.devices()) == 8, jax.devices()
+state = {"w": np.arange(4096, dtype=np.float32).reshape(64, 64),
+         "s": np.float32(3.25)}
+with tempfile.TemporaryDirectory() as td:
+    ck = CodedCheckpointer(td, n_shards=8, n_parity=2)
+    ck.save(5, state)
+    d = Path(td) / "step_000005"
+    for name in ("shard_002.npy", "shard_004.npy"):
+        os.remove(d / name)
+    rest = ck.restore(5, state)
+    ok = jax.tree.map(lambda a, b: bool(np.array_equal(np.asarray(a),
+                                                       np.asarray(b))),
+                      state, rest)
+    assert all(jax.tree.leaves(ok)), "degraded restore drifted"
+print("degraded checkpoint restore (2 shard files deleted) OK")
+
+print("RECOVER_MESH_CHECKS_OK")
