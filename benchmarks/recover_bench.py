@@ -50,7 +50,7 @@ def rows() -> list[str]:
         us_data = _time(lambda: dec.data(v))
         out.append(
             f"recover/decode_local_K{K}_R{R}_E{n_erased}_W{W},{us_dec:.0f},"
-            f"encode_us={us_enc:.0f};data_us={us_data:.0f};"
+            f"backend=local;encode_us={us_enc:.0f};data_us={us_data:.0f};"
             f"ratio={us_dec / max(us_enc, 1e-9):.2f}")
 
         c_dec = dec.cost()  # decode_cost with the spec's W folded into C2
@@ -58,5 +58,6 @@ def rows() -> list[str]:
         model_us = c_dec.total(Decoder.ALPHA, Decoder.BETA_BITS) * 1e6
         out.append(
             f"recover/decode_model_K{K}_R{R}_E{n_erased},{model_us:.1f},"
-            f"C1={c_dec.C1};C2={c_dec.C2};enc_C1={c_enc.C1};enc_C2={c_enc.C2}")
+            f"backend=model;C1={c_dec.C1};C2={c_dec.C2};"
+            f"enc_C1={c_enc.C1};enc_C2={c_enc.C2}")
     return out

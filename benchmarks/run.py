@@ -1,8 +1,29 @@
 """Benchmark driver — one section per paper table/claim.
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
-writes the machine-readable ``{name: us_per_call}`` map (the CI artifact —
-e.g. ``--json BENCH_recover.json`` with ``--sections recover``).  Sections:
+writes the machine-readable artifact.  Each JSON entry records the value
+AND the benchmark's shape parameters (parsed from the ``K16``/``R4``/
+``E2``/``W4096``/``p1`` tokens of the row name plus any ``backend=`` in
+the derived column), so baselines stay comparable across edits::
+
+    {"recover/decode_local_K16_R4_E4_W4096":
+        {"us_per_call": 812.0,
+         "params": {"K": 16, "R": 4, "E": 4, "W": 4096, "backend": "local"},
+         "derived": "encode_us=..."}}
+
+``--check BASELINE`` gates the run against a committed baseline
+(``benchmarks/baselines/baseline.json``) and exits nonzero on regression:
+for every baseline entry whose section was run, the shape params must
+match exactly (shape drift without a baseline refresh is an error), and
+the value must satisfy the entry's bound — absolute ``min``/``max`` when
+present (e.g. the NTT speedup ratio's ``min: 1.5``), otherwise relative:
+at most ``us_per_call * (1 + tolerance)`` with ``tolerance`` taken from
+the entry or ``--tolerance`` (default 0.25).  Entries with
+``"better": "higher"`` invert the relative direction.  The JSON artifact
+is still written before the gate fires, so CI uploads it for trend
+inspection even on a failing run.
+
+Sections:
 
   table1/*       — Table I: universal / DFT / Vandermonde A2A costs vs theory
   multireduce/*  — Sec. II comparison vs Jeong et al. [21] + strawman
@@ -10,6 +31,8 @@ e.g. ``--json BENCH_recover.json`` with ``--sections recover``).  Sections:
   kernel/*       — Pallas gf_matmul micro-bench (interpret mode)
   recover/*      — decode vs encode: DecodePlan kernel hot path + closed-form
                    network costs (the repair half of the pipeline)
+  stream/*       — streamed vs single-shot plan execution + NTT fast path
+                   vs dense local encode (benchmarks/stream_bench.py)
   mesh_encode/*  — lowered-HLO collective bytes, universal vs RS (subprocess)
   mesh_a2a/*     — mesh A2A scaling (subprocess)
   roofline/*     — dry-run roofline cells, if results/dryrun exists
@@ -21,6 +44,7 @@ from __future__ import annotations
 import argparse
 import json
 import os
+import re
 import subprocess
 import sys
 from pathlib import Path
@@ -29,27 +53,91 @@ _REPO = Path(__file__).resolve().parent.parent
 sys.path.insert(0, str(_REPO / "src"))
 sys.path.insert(0, str(_REPO))  # `benchmarks` namespace package, any cwd
 
+_PARAM_RE = re.compile(r"(?:^|_)([KRWEp])(\d+)(?=_|$|,)")
+_BACKEND_RE = re.compile(r"(?:^|;)backend=([a-zA-Z_]+)")
 
-def _emit(row: str, acc: dict[str, float]) -> None:
+
+def _params_from(name: str, derived: str) -> dict:
+    """Shape parameters encoded in a row: K/R/E/W/p name tokens + backend."""
+    tail = name.split("/", 1)[-1]
+    params: dict = {k: int(v) for k, v in _PARAM_RE.findall(tail)}
+    m = _BACKEND_RE.search(derived)
+    if m:
+        params["backend"] = m.group(1)
+    return params
+
+
+def _emit(row: str, acc: dict[str, dict]) -> None:
     print(row, flush=True)
-    parts = row.split(",")
+    parts = row.split(",", 2)
     if len(parts) >= 2:
         try:
-            acc[parts[0]] = float(parts[1])
+            us = float(parts[1])
         except ValueError:
-            pass
+            return
+        derived = parts[2] if len(parts) > 2 else ""
+        acc[parts[0]] = {"us_per_call": us,
+                         "params": _params_from(parts[0], derived),
+                         "derived": derived}
+
+
+def _check_baseline(acc: dict[str, dict], baseline_path: str,
+                    tolerance: float, ran_sections: set[str] | None) -> list[str]:
+    """Compare measured entries to the baseline; return failure messages."""
+    base = json.loads(Path(baseline_path).read_text())
+    problems: list[str] = []
+    for name, b in sorted(base.items()):
+        section = name.split("/", 1)[0]
+        if ran_sections is not None and section not in ran_sections:
+            continue
+        cur = acc.get(name)
+        if cur is None:
+            problems.append(f"{name}: in baseline but not measured")
+            continue
+        bp, cp = b.get("params"), cur.get("params")
+        if bp and cp and bp != cp:
+            problems.append(
+                f"{name}: shape params drifted (baseline {bp}, got {cp}) — "
+                "regenerate the baseline if the change is intentional")
+            continue
+        val = cur["us_per_call"]
+        if "min" in b and val < b["min"]:
+            problems.append(f"{name}: {val:.2f} below required min {b['min']}")
+        if "max" in b and val > b["max"]:
+            problems.append(f"{name}: {val:.2f} above allowed max {b['max']}")
+        if "min" in b or "max" in b or "us_per_call" not in b:
+            continue
+        tol = float(b.get("tolerance", tolerance))
+        ref = float(b["us_per_call"])
+        if b.get("better") == "higher":
+            if val < ref * (1 - tol):
+                problems.append(
+                    f"{name}: {val:.2f} regressed below {ref:.2f} "
+                    f"* (1 - {tol}) = {ref * (1 - tol):.2f}")
+        elif val > ref * (1 + tol):
+            problems.append(
+                f"{name}: {val:.2f}us regressed above {ref:.2f}us "
+                f"* (1 + {tol}) = {ref * (1 + tol):.2f}us")
+    return problems
 
 
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
     ap.add_argument("--json", metavar="PATH", default=None,
-                    help="also write {name: us_per_call} JSON to PATH")
+                    help="write the {name: {us_per_call, params}} artifact")
     ap.add_argument("--sections", nargs="+", default=None,
                     help="run only the named sections (default: all)")
+    ap.add_argument("--check", metavar="BASELINE", default=None,
+                    help="gate against a baseline JSON; nonzero exit on "
+                         "regression")
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="default relative tolerance for --check entries "
+                         "without their own (default 0.25)")
     args = ap.parse_args()
 
     from benchmarks import (framework_costs, kernel_bench,
-                            multireduce_compare, recover_bench, table1_costs)
+                            multireduce_compare, recover_bench, stream_bench,
+                            table1_costs)
 
     inproc = {
         "table1": table1_costs,
@@ -57,6 +145,7 @@ def main() -> None:
         "framework": framework_costs,
         "kernel": kernel_bench,
         "recover": recover_bench,
+        "stream": stream_bench,
     }
     subproc = {
         "mesh_encode": ("mesh_encode_bench.py", "mesh_encode/"),
@@ -72,7 +161,7 @@ def main() -> None:
     def on(name: str) -> bool:
         return wanted is None or name in wanted
 
-    acc: dict[str, float] = {}
+    acc: dict[str, dict] = {}
     failed: list[str] = []
     print("name,us_per_call,derived")
     for name, mod in inproc.items():
@@ -116,6 +205,15 @@ def main() -> None:
         print(f"wrote {len(acc)} entries to {args.json}", file=sys.stderr)
     if failed:
         raise SystemExit(f"benchmark subprocesses failed: {failed}")
+    if args.check:
+        ran = None if wanted is None else set(wanted)
+        problems = _check_baseline(acc, args.check, args.tolerance, ran)
+        if problems:
+            print("PERF REGRESSION GATE FAILED:", file=sys.stderr)
+            for p in problems:
+                print(f"  {p}", file=sys.stderr)
+            raise SystemExit(1)
+        print(f"perf gate OK against {args.check}", file=sys.stderr)
 
 
 if __name__ == "__main__":

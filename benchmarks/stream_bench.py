@@ -1,0 +1,116 @@
+"""Streamed vs single-shot throughput of the plan execution layer.
+
+Three row families (all local backend — the kernel hot path):
+
+  stream/encode_single_*   — whole-W `plan.run` wall time across
+                             W in {2^12 .. 2^18} (NTT fast-path spec)
+  stream/encode_stream_*   — same payload through `plan.run_stream`
+                             (VMEM-sized chunks, cached chunk callables,
+                             double-buffered pipeline); derived carries
+                             the single-shot time and the ratio
+  stream/decode_*          — the same comparison for `DecodePlan`
+  stream/ntt_speedup_*     — NTT fast path vs the dense `encode_blocks`
+                             field matmul at W = 2^16; us_per_call IS the
+                             dimensionless speedup ratio (gated >= 1.5 by
+                             the committed baseline)
+
+Dense legs are measured once (they are the slow side by construction);
+NTT/stream legs are averaged over reps.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import CodeSpec, Encoder
+from repro.core.field import FERMAT
+from repro.recover import Decoder
+
+
+def _time(fn, reps: int = 3, warm: bool = True) -> float:
+    """Best-of-reps wall time (min is far more stable than mean under CI
+    runner contention; the baseline gate compares these)."""
+    if warm:
+        fn()
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        fn()
+        best = min(best, time.perf_counter() - t0)
+    return best * 1e6
+
+
+def _consume(gen) -> None:
+    for _ in gen:
+        pass
+
+
+def rows() -> list[str]:
+    rng = np.random.default_rng(11)
+    out = []
+
+    # ---- streamed vs single-shot encode sweep (NTT path, rs) -------------
+    K, R = 256, 64
+    spec = CodeSpec(kind="rs", K=K, R=R)
+    plan = Encoder.plan(spec, backend="local")
+    assert plan.local_impl == "ntt"
+    for logw in range(12, 19, 2):
+        W = 2 ** logw
+        x = FERMAT.rand((K, W), rng)
+        reps = 2 if W <= 1 << 16 else 1
+        us_1 = _time(lambda: plan.run(x), reps)
+        us_s = _time(lambda: _consume(plan.run_stream(x)), reps)
+        out.append(
+            f"stream/encode_single_rs_K{K}_R{R}_W{W},{us_1:.0f},"
+            f"backend=local;impl={plan.local_impl}")
+        out.append(
+            f"stream/encode_stream_rs_K{K}_R{R}_W{W},{us_s:.0f},"
+            f"backend=local;single_us={us_1:.0f};"
+            f"ratio={us_1 / max(us_s, 1e-9):.2f}")
+
+    # ---- streamed vs single-shot decode (kernel path) --------------------
+    Kd, Rd, Ed, Wd = 32, 8, 8, 1 << 16
+    spec_d = CodeSpec(kind="rs", K=Kd, R=Rd, W=Wd)
+    xd = FERMAT.rand((Kd, Wd), rng)
+    encd = Encoder.plan(spec_d, backend="local")
+    cw = np.concatenate([xd % FERMAT.q, encd.run(xd)])
+    dec = Decoder.plan(spec_d, erased=tuple(range(Ed)), backend="local")
+    v = cw[list(dec.kept)]
+    us_1 = _time(lambda: dec.run(v), 2)
+    us_s = _time(lambda: _consume(dec.run_stream(v)), 2)
+    out.append(
+        f"stream/decode_single_rs_K{Kd}_R{Rd}_E{Ed}_W{Wd},{us_1:.0f},"
+        f"backend=local")
+    out.append(
+        f"stream/decode_stream_rs_K{Kd}_R{Rd}_E{Ed}_W{Wd},{us_s:.0f},"
+        f"backend=local;single_us={us_1:.0f};"
+        f"ratio={us_1 / max(us_s, 1e-9):.2f}")
+
+    # ---- NTT fast path vs dense field matmul at W = 2^16 -----------------
+    # the planner's two local implementations on identical payloads; the
+    # speedup row is the acceptance gate (>= 1.5x for power-of-two K)
+    import jax.numpy as jnp
+
+    from repro.kernels.ops import encode_blocks
+
+    Wf = 1 << 16
+    for kind, Kf, Rf in [("rs", 128, 32), ("dft", 128, 128)]:
+        spec_f = CodeSpec(kind=kind, K=Kf, R=Rf)
+        pf = Encoder.plan(spec_f, backend="local")
+        assert pf.local_impl == "ntt"
+        xf = FERMAT.rand((Kf, Wf), rng)
+        x32 = jnp.asarray(xf % FERMAT.q, jnp.uint32)
+        A32 = jnp.asarray(pf.A, jnp.uint32)
+        us_ntt = _time(lambda: pf.run(xf), 2)
+        us_dense = _time(
+            lambda: np.asarray(encode_blocks(x32, A32)), reps=1)
+        ratio = us_dense / max(us_ntt, 1e-9)
+        out.append(
+            f"stream/encode_ntt_{kind}_K{Kf}_R{Rf}_W{Wf},{us_ntt:.0f},"
+            f"backend=local;dense_us={us_dense:.0f}")
+        out.append(
+            f"stream/ntt_speedup_{kind}_K{Kf}_R{Rf}_W{Wf},{ratio:.2f},"
+            f"backend=local;dimensionless=1;ntt_us={us_ntt:.0f};"
+            f"dense_us={us_dense:.0f}")
+    return out

@@ -1,5 +1,7 @@
 """Batched greedy serving demo (prefill + KV-cached decode), with the coded
-parameter-shard self-check (unified encoding API) gating startup."""
+parameter-shard self-check (unified encoding API) gating startup and the
+batched coding queue coalescing concurrent encode/decode requests into
+streamed plan executions (`--queue-demo`)."""
 import sys
 from pathlib import Path
 
@@ -7,7 +9,8 @@ sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 if __name__ == "__main__":
     sys.argv = ["serve_demo", "--arch", "mamba2_780m", "--batch", "4",
-                "--prompt-len", "12", "--gen-len", "24", "--coded-selfcheck"]
+                "--prompt-len", "12", "--gen-len", "24", "--coded-selfcheck",
+                "--queue-demo", "8"]
     from repro.launch.serve import main
 
     main()

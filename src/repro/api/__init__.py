@@ -15,8 +15,10 @@ cache contract and `spec` for the CodeSpec fields.
 """
 from .planner import ALPHA_DEFAULT, BETA_BITS_DEFAULT, Encoder, EncodePlan, method_costs
 from .spec import CodeSpec
+from .stream import StreamStats, default_chunk_w
 
 __all__ = [
     "CodeSpec", "Encoder", "EncodePlan", "method_costs",
+    "StreamStats", "default_chunk_w",
     "ALPHA_DEFAULT", "BETA_BITS_DEFAULT",
 ]

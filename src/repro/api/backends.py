@@ -40,14 +40,45 @@ def run_simulator(plan, x: np.ndarray) -> np.ndarray:
     return np.asarray(y, np.int64)
 
 
+def local_encode_callable(plan):
+    """The plan's single jitted local-encode executable (K, w) uint32 ->
+    (R, w) uint32, cached on the plan for its lifetime.
+
+    The planner auto-selects the O(K log K) NTT fast path
+    (`kernels.ntt_encode`) for dft and structured rs/lagrange specs when
+    their point sets are radix-2 single cosets (in particular, K a power
+    of two); otherwise this is the dense `encode_blocks` field matmul.
+    Both are exact mod-q arithmetic, so the choice is bitwise-invisible.
+    jit's shape cache makes one executable per chunk width.
+    """
+    if plan._local_fn is None:
+        import jax.numpy as jnp
+
+        from .stream import maybe_donate_jit
+
+        params = plan.tables.ntt_params()
+        if params is not None:
+            from ..kernels.ntt_encode import ntt_encode
+
+            fn = maybe_donate_jit(lambda x: ntt_encode(x, params),
+                                  donate=plan.spec.K == plan.spec.R)
+        else:
+            from ..kernels.ops import encode_blocks
+
+            A = jnp.asarray(plan.A, jnp.uint32)
+            fn = maybe_donate_jit(lambda x: encode_blocks(x, A),
+                                  donate=False)
+        plan._local_fn = fn
+    return plan._local_fn
+
+
 def run_local(plan, x: np.ndarray) -> np.ndarray:
-    """Single-device encode on the Pallas/jnp kernel path (no network)."""
+    """Single-device encode on the kernel path (no network): the cached
+    jitted NTT fast path or dense field matmul, per the planner."""
     import jax.numpy as jnp
 
-    from ..kernels.ops import encode_blocks
-
     x32 = jnp.asarray(np.asarray(x) % plan.field.q, jnp.uint32)
-    y = encode_blocks(x32, jnp.asarray(plan.A, jnp.uint32))
+    y = local_encode_callable(plan)(x32)
     return np.asarray(y, np.int64)
 
 

@@ -58,6 +58,16 @@ class HostTables:
     A: np.ndarray                      # (K, R) generator block
     sgrs: StructuredGRS | None
     _mesh: dict[str, Any] = dc_field(default_factory=dict)
+    _ntt: Any = "unset"                # lazy NTTEncodeParams | None
+
+    def ntt_params(self):
+        """NTT fast-path constants for the local backend (None when the
+        spec has no radix-2 single-coset structure), built once."""
+        if self._ntt == "unset":
+            from ..kernels.ntt_encode import NTTEncodeParams
+
+            self._ntt = NTTEncodeParams.build(self.spec, self.sgrs)
+        return self._ntt
 
     def mesh_tables(self, method: str):
         """ParityTables for the framework grid, built once per method."""
@@ -182,7 +192,10 @@ class EncodePlan:
     # and shared — read sim_net immediately after your own .run(), not later
     # (another caller's run overwrites it).
     sim_net: Any = None
+    # StreamStats of the LAST run_stream on this plan (same sharing caveat).
+    stream_stats: Any = None
     _mesh_fn: Callable | None = None
+    _local_fn: Callable | None = None
 
     @property
     def field(self) -> Field:
@@ -206,6 +219,61 @@ class EncodePlan:
         squeeze = x.ndim == 1
         y = RUNNERS[self.backend](self, x[:, None] if squeeze else x)
         return y[:, 0] if squeeze else y
+
+    def run_stream(self, payload, *, chunk_w: int | None = None):
+        """Streamed encode: generator of (R, w) sink blocks.
+
+        `payload` is a (K, W) array (split into VMEM-sized chunks of width
+        `chunk_w`, default `stream.default_chunk_w`) or an iterable of
+        (K, w_i) chunks (streamed as given, re-split only above chunk_w).
+        Concatenating the yielded blocks is bitwise-equal to `run` on the
+        concatenated payload.  On the simulator backend,
+        `plan.stream_stats` carries exact per-chunk C1/C2.
+        """
+        from . import stream
+
+        return stream.run_stream(self, payload, chunk_w=chunk_w)
+
+    def run_batched(self, xs, *, chunk_w: int | None = None) -> list[np.ndarray]:
+        """Encode a batch of payloads (each (K,) or (K, W_i)) in one
+        coalesced streamed execution; returns per-payload sink values."""
+        from . import stream
+
+        return stream.run_batched(self, xs, chunk_w=chunk_w)
+
+    @property
+    def local_impl(self) -> str:
+        """Which kernel the local backend runs: "ntt" (O(K log K) fast
+        path) or "dense" (field-matmul `encode_blocks`)."""
+        return "ntt" if self.tables.ntt_params() is not None else "dense"
+
+    # -- streaming adapter (see api/stream.py) ------------------------------
+    def _stream_sim_chunk(self, x: np.ndarray) -> np.ndarray:
+        from .backends import run_simulator
+
+        return run_simulator(self, x)
+
+    def _stream_device_fn(self):
+        import jax
+        import numpy as _np
+
+        q = self.field.q
+        spec = self.spec
+
+        def to_device(c):
+            return jax.device_put(
+                _np.ascontiguousarray(c % q).astype(_np.uint32))
+
+        if self.backend == "mesh":
+            fn = self.mesh_callable()
+            if spec.kind == "dft":
+                return to_device, fn, lambda y: np.asarray(y, np.int64)
+            return to_device, fn, lambda y: np.asarray(
+                y, np.int64)[: spec.R]
+        from .backends import local_encode_callable
+
+        fn = local_encode_callable(self)
+        return to_device, fn, lambda y: np.asarray(y, np.int64)
 
     def cost(self) -> LinearCost:
         """(C1, C2) of the chosen schedule per the Table-I cost model."""
@@ -234,8 +302,10 @@ class EncodePlan:
             f"  tables  : cached, key={s.table_key()}",
         ]
         if self.backend == "local":
-            lines.append("  note    : local backend runs the Pallas/jnp "
-                         "field-matmul kernel; no schedule is executed")
+            impl = ("O(K log K) NTT fast path" if self.local_impl == "ntt"
+                    else "Pallas/jnp field-matmul kernel")
+            lines.append(f"  note    : local backend runs the {impl}; "
+                         "no schedule is executed")
         return "\n".join(lines)
 
 

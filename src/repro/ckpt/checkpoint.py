@@ -97,6 +97,9 @@ class CodedCheckpointer:
     n_shards: int = 16
     n_parity: int = 4
     field: Any = None
+    # streaming chunk width (payload columns) for the coded save/restore
+    # paths; None = api.stream.default_chunk_w for the shard count
+    chunk_w: int | None = None
     _thread: threading.Thread | None = None
 
     def __post_init__(self):
@@ -134,11 +137,22 @@ class CodedCheckpointer:
             return self.field.matmul(self._A.T, shards)
         return self._plan.run(shards)
 
+    def _parity_stream(self, shards: np.ndarray):
+        """Generator of (R, w) parity blocks — `EncodePlan.run_stream` on
+        the kernel path (cached chunk callables, NTT fast path when the
+        shard counts allow it), exact chunked host matmul otherwise."""
+        if self._plan is not None:
+            yield from self._plan.run_stream(shards, chunk_w=self.chunk_w)
+            return
+        from ..api.stream import iter_chunks
+
+        for c in iter_chunks(shards, self.n_shards, self.chunk_w):
+            yield self.field.matmul(self._A.T, c)
+
     # -- save ---------------------------------------------------------------
     def save(self, step: int, state: Any, background: bool = False) -> str:
         raw, meta = tree_to_bytes(state)
         shards = self.shard_symbols(raw)
-        parity = self.encode_parity(shards)
 
         def _write():
             final = Path(self.directory) / f"step_{step:06d}"
@@ -151,8 +165,32 @@ class CodedCheckpointer:
             (tmp / "meta.json").write_text(json.dumps(meta2))
             for k in range(self.n_shards):
                 np.save(tmp / f"shard_{k:03d}.npy", shards[k].astype(np.uint32))
-            for r in range(self.n_parity):
-                np.save(tmp / f"parity_{r:03d}.npy", parity[r].astype(np.uint32))
+            # parity is STREAMED into preallocated .npy memmaps: the encode
+            # runs chunk-by-chunk (double-buffered on the kernel path) and
+            # the full (R, L) parity matrix is never materialized
+            L = shards.shape[1]
+            if L == 0:  # empty state: mmap cannot map zero bytes
+                for r in range(self.n_parity):
+                    np.save(tmp / f"parity_{r:03d}.npy",
+                            np.zeros(0, np.uint32))
+                if final.exists():
+                    shutil.rmtree(final)
+                os.rename(tmp, final)
+                return
+            mms = [np.lib.format.open_memmap(
+                       tmp / f"parity_{r:03d}.npy", mode="w+",
+                       dtype=np.uint32, shape=(L,))
+                   for r in range(self.n_parity)]
+            col = 0
+            for blk in self._parity_stream(shards):
+                w = blk.shape[1]
+                for r in range(self.n_parity):
+                    mms[r][col : col + w] = blk[r].astype(np.uint32)
+                col += w
+            assert col == L
+            for mm in mms:
+                mm.flush()
+            del mms
             if final.exists():
                 shutil.rmtree(final)
             os.rename(tmp, final)
@@ -199,10 +237,13 @@ class CodedCheckpointer:
         loaded: dict[int, np.ndarray] = {}
 
         def _load(idx: int) -> np.ndarray:
+            # memory-mapped: survivor files are read chunk-by-chunk by the
+            # streamed repair and row-by-row by the final assembly, never
+            # duplicated wholesale on the heap
             if idx not in loaded:
                 name = (f"shard_{idx:03d}.npy" if idx < N
                         else f"parity_{idx - N:03d}.npy")
-                loaded[idx] = np.load(d / name).astype(np.int64)
+                loaded[idx] = np.load(d / name, mmap_mode="r")
             return loaded[idx]
 
         if any(e < N for e in erased):
@@ -216,13 +257,35 @@ class CodedCheckpointer:
             # re-deriving all K data shards through the full K x K solve;
             # repaired rows for missing *parity* files ride along unused
             # (they must be in `erased` so plan.kept avoids them — at most
-            # R-1 extra columns, still far below the K-column full solve)
-            repaired = plan.run(np.stack([_load(i) for i in plan.kept]))
-            rep = {e: repaired[i] for i, e in enumerate(plan.erased)}
-            shards = np.stack([rep[k] if k in rep else _load(k)
+            # R-1 extra columns, still far below the K-column full solve).
+            # The repair itself is STREAMED: survivor chunks are sliced
+            # straight off the memmaps and decoded through the plan's
+            # cached chunk callables, so no full-width survivor stack or
+            # repaired matrix is ever materialized at once.
+            L = int(_load(plan.kept[0]).shape[0])
+            rep = {e: np.empty(L, np.int64) for e in plan.erased}
+            from ..api.stream import default_chunk_w
+
+            cw = self.chunk_w or default_chunk_w(N)
+
+            def survivor_chunks():
+                for c0 in range(0, L, cw):
+                    yield np.stack([np.asarray(_load(i)[c0 : c0 + cw],
+                                               np.int64)
+                                    for i in plan.kept])
+
+            col = 0
+            for blk in plan.run_stream(survivor_chunks()):
+                for j, e in enumerate(plan.erased):
+                    rep[e][col : col + blk.shape[1]] = blk[j]
+                col += blk.shape[1]
+            assert col == L
+            shards = np.stack([rep[k] if k in rep
+                               else np.asarray(_load(k), np.int64)
                                for k in range(N)])
         else:
-            shards = np.stack([_load(k) for k in range(N)])
+            shards = np.stack([np.asarray(_load(k), np.int64)
+                               for k in range(N)])
         sym = shards.reshape(-1)[: -(-meta["nbytes"] // 2)]
         raw = symbols_to_bytes(sym, meta["nbytes"])
         return bytes_to_tree(raw, meta, example_state)

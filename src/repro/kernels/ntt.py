@@ -46,11 +46,15 @@ def _fermat_sub_u32(a, b):
     return jnp.where(a >= b, a - b, a + jnp.uint32(FERMAT_Q) - b)
 
 
-def _ntt_kernel(x_ref, tw_ref, o_ref, *, K: int, inverse: bool):
+def _ntt_stages(x, tw, *, K: int, inverse: bool):
     """DIF butterflies forward; stage-wise inverse (DIT form, inverse
-    twiddles, reversed stage order) for the inverse transform."""
+    twiddles, reversed stage order) for the inverse transform.
+
+    Shared by the Pallas kernel body and the fused-XLA path (`ntt_xla`):
+    all arithmetic is exact uint32 mod-q, so the two are bitwise-equal.
+    x: (K, bw) uint32 values; tw: (H, K/2) uint32 twiddles.
+    """
     H = int(math.log2(K))
-    x = x_ref[...].astype(jnp.uint32)  # (K, bw)
     stages = range(H - 1, -1, -1) if inverse else range(H)
     for h in stages:
         half = K >> (h + 1)
@@ -58,7 +62,7 @@ def _ntt_kernel(x_ref, tw_ref, o_ref, *, K: int, inverse: bool):
         xr = x.reshape(groups, 2 * half, -1)
         u = xr[:, :half]
         v = xr[:, half:]
-        twr = tw_ref[h, :].reshape(groups, half)[:, :, None]
+        twr = tw[h, :].reshape(groups, half)[:, :, None]
         if inverse:
             # inverse of the DIF stage: u' = a + b*w^-1, v' = a - b*w^-1
             # (the 1/2-per-stage factors fold into the final K^-1 scale)
@@ -70,7 +74,12 @@ def _ntt_kernel(x_ref, tw_ref, o_ref, *, K: int, inverse: bool):
             s = _fermat_add_u32(u, v)
             d = _fermat_mul_u32(_fermat_sub_u32(u, v), twr)
         x = jnp.concatenate([s, d], axis=1).reshape(K, -1)
-    o_ref[...] = x
+    return x
+
+
+def _ntt_kernel(x_ref, tw_ref, o_ref, *, K: int, inverse: bool):
+    o_ref[...] = _ntt_stages(x_ref[...].astype(jnp.uint32), tw_ref[...],
+                             K=K, inverse=inverse)
 
 
 @functools.partial(jax.jit, static_argnames=("inverse", "bw", "interpret"))
@@ -106,6 +115,34 @@ def ntt(x: jnp.ndarray, *, inverse: bool = False, bw: int = 128,
         kinv = jnp.uint32(pow(K, FERMAT_Q - 2, FERMAT_Q))
         out = _fermat_mul_u32(out, kinv)
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("inverse",))
+def ntt_xla(x: jnp.ndarray, *, inverse: bool = False) -> jnp.ndarray:
+    """`ntt` as one fused XLA computation (no pallas_call, no grid).
+
+    Bitwise-identical to the Pallas kernel (same `_ntt_stages` body, exact
+    integer arithmetic) but without the per-grid-step interpreter overhead —
+    on CPU this is the throughput path; on TPU the Pallas kernel with its
+    explicit VMEM residency is preferred (see `ntt_auto`).
+    """
+    x = x.astype(jnp.uint32)
+    K = x.shape[0]
+    assert 2 ** int(math.log2(K)) == K, "K must be a power of two"
+    tw = jnp.asarray(ntt_twiddles(K, inverse=inverse))
+    out = _ntt_stages(x, tw, K=K, inverse=inverse)
+    if inverse:
+        kinv = jnp.uint32(pow(K, FERMAT_Q - 2, FERMAT_Q))
+        out = _fermat_mul_u32(out, kinv)
+    return out
+
+
+def ntt_auto(x: jnp.ndarray, *, inverse: bool = False) -> jnp.ndarray:
+    """Backend-appropriate NTT: the Pallas kernel on TPU (compiled, VMEM
+    tiling), the fused-XLA path elsewhere.  Traceable under jit."""
+    if jax.default_backend() == "tpu":
+        return ntt(x, inverse=inverse, interpret=False)
+    return ntt_xla(x, inverse=inverse)
 
 
 def ntt_ref(x: jnp.ndarray, inverse: bool = False) -> np.ndarray:

@@ -1,0 +1,169 @@
+"""Batched request queue: coalesce concurrent encode/decode requests into
+streamed plan executions.
+
+A serving replica receives many small independent coding requests (encode
+these shards, repair that erasure pattern).  Dispatching each one as its
+own `plan.run` pays jit dispatch and transfer overhead per request; the
+queue instead drains whatever is pending, groups requests that share an
+executable plan — same (spec, method/erasure pattern, backend) — and runs
+each group as ONE `plan.run_batched` call, so concurrent payloads ride the
+same chunk callables and the double-buffered stream pipeline
+(api/stream.py).
+
+    q = CodingQueue(backend="local")
+    fut = q.submit_encode(spec, x)          # returns concurrent Future
+    y = fut.result()
+    q.close()
+
+Single worker thread; batching is opportunistic (whatever accumulated
+since the last drain, bounded by `max_batch_w` payload columns per group).
+Correctness is backend-bitwise: results equal per-request `plan.run`.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+from concurrent.futures import Future
+from dataclasses import dataclass, field as dc_field
+from typing import Any
+
+import numpy as np
+
+
+@dataclass
+class _Request:
+    key: tuple                 # plan-cache group key
+    op: str                    # "encode" | "decode"
+    spec: Any
+    erased: tuple | None
+    payload: np.ndarray
+    future: Future
+
+
+@dataclass
+class QueueStats:
+    requests: int = 0
+    batches: int = 0
+    coalesced: list[int] = dc_field(default_factory=list)  # group sizes
+
+    @property
+    def max_coalesced(self) -> int:
+        return max(self.coalesced, default=0)
+
+
+class CodingQueue:
+    """Coalescing encode/decode front-end over the plan caches."""
+
+    def __init__(self, backend: str = "local", *,
+                 chunk_w: int | None = None, max_batch_w: int = 1 << 16):
+        # finish jax's (heavily circular) first import on THIS thread:
+        # letting the worker and concurrent clients race it can observe a
+        # partially initialized jax.numpy (py3.10 import lock granularity)
+        import jax.numpy  # noqa: F401
+
+        self.backend = backend
+        self.chunk_w = chunk_w
+        self.max_batch_w = max_batch_w
+        self.stats = QueueStats()
+        self._q: "queue.Queue[_Request | None]" = queue.Queue()
+        self._closing = False
+        self._worker = threading.Thread(target=self._loop, daemon=True)
+        self._worker.start()
+
+    # -- client side --------------------------------------------------------
+    def submit_encode(self, spec, x) -> Future:
+        """Encode payload x (K,)/(K, W) under `spec`; Future of sinks."""
+        return self._submit(_Request(("enc", spec, self.backend), "encode",
+                                     spec, None, np.asarray(x), Future()))
+
+    def submit_decode(self, spec, erased, v) -> Future:
+        """Repair `erased` from survivor symbols v; Future of symbols."""
+        erased = tuple(sorted({int(e) for e in erased}))
+        return self._submit(_Request(("dec", spec, erased, self.backend),
+                                     "decode", spec, erased,
+                                     np.asarray(v), Future()))
+
+    def _submit(self, req: _Request) -> Future:
+        if self._closing or self._worker is None:
+            raise RuntimeError("queue is closed")
+        self._q.put(req)
+        return req.future
+
+    def close(self, timeout: float | None = 30.0) -> None:
+        """Drain outstanding requests and stop the worker.
+
+        The worker processes everything still queued (even a request that
+        raced past `_submit`'s closed check) before exiting, so no
+        accepted Future is left unresolved."""
+        if self._worker is None:
+            return
+        self._closing = True
+        self._q.put(None)
+        self._worker.join(timeout=timeout)
+        self._worker = None
+
+    # -- worker side --------------------------------------------------------
+    def _drain(self, first: _Request | None) -> tuple[list[_Request], bool]:
+        """Everything currently queued, and whether a close() sentinel was
+        seen (leftovers BEHIND the sentinel are drained too — they raced
+        with close() and must still resolve)."""
+        batch = [] if first is None else [first]
+        closing = first is None
+        while True:
+            try:
+                nxt = self._q.get_nowait()
+            except queue.Empty:
+                return batch, closing
+            if nxt is None:
+                closing = True
+            else:
+                batch.append(nxt)
+
+    def _loop(self) -> None:
+        while True:
+            first = self._q.get()
+            batch, closing = self._drain(first)
+            self.stats.requests += len(batch)  # single-writer: the worker
+            groups: dict[tuple, list[_Request]] = {}
+            for req in batch:
+                groups.setdefault(req.key, []).append(req)
+            for reqs in groups.values():
+                self._process_group(reqs)
+            if closing:
+                return
+
+    def _process_group(self, reqs: list[_Request]) -> None:
+        from ..api import Encoder
+        from ..recover import Decoder
+
+        self.stats.batches += 1
+        self.stats.coalesced.append(len(reqs))
+        try:
+            r0 = reqs[0]
+            if r0.op == "encode":
+                plan = Encoder.plan(r0.spec, backend=self.backend)
+            else:
+                plan = Decoder.plan(r0.spec, erased=r0.erased,
+                                    backend=self.backend)
+            # bound the coalesced width per run_batched call
+            chunk: list[_Request] = []
+            w = 0
+            for req in reqs:
+                rw = 1 if req.payload.ndim == 1 else req.payload.shape[1]
+                if chunk and w + rw > self.max_batch_w:
+                    self._run_group(plan, chunk)
+                    chunk, w = [], 0
+                chunk.append(req)
+                w += rw
+            if chunk:
+                self._run_group(plan, chunk)
+        except Exception as exc:  # noqa: BLE001 — propagate per-future
+            for req in reqs:
+                if not req.future.done():
+                    req.future.set_exception(exc)
+
+    def _run_group(self, plan, reqs: list[_Request]) -> None:
+        outs = plan.run_batched([r.payload for r in reqs],
+                                chunk_w=self.chunk_w)
+        for req, out in zip(reqs, outs):
+            req.future.set_result(out)

@@ -36,15 +36,29 @@ def run_simulator(plan, v: np.ndarray) -> np.ndarray:
     return np.asarray(y, np.int64)
 
 
+def local_decode_callable(plan):
+    """The plan's single jitted local-decode executable (K, w) uint32 ->
+    (|E|, w) uint32, cached for the plan's lifetime (jit's shape cache
+    gives one compiled variant per chunk width — see api/stream.py)."""
+    if plan._local_fn is None:
+        import jax.numpy as jnp
+
+        from ..api.stream import maybe_donate_jit
+        from ..kernels.ops import decode_blocks
+
+        D = jnp.asarray(plan.tables.D % plan.field.q, jnp.uint32)
+        plan._local_fn = maybe_donate_jit(lambda v: decode_blocks(v, D),
+                                          donate=False)
+    return plan._local_fn
+
+
 def run_local(plan, v: np.ndarray) -> np.ndarray:
     """Single-device decode on the Pallas/jnp kernel path (no network)."""
     import jax.numpy as jnp
 
-    from ..kernels.ops import decode_blocks
-
     q = plan.field.q
     v32 = jnp.asarray(np.asarray(v) % q, jnp.uint32)
-    y = decode_blocks(v32, jnp.asarray(plan.tables.D % q, jnp.uint32))
+    y = local_decode_callable(plan)(v32)
     return np.asarray(y, np.int64)
 
 

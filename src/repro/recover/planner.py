@@ -171,7 +171,10 @@ class DecodePlan:
     # RoundNetwork of the LAST simulator run (same sharing caveat as
     # EncodePlan.sim_net: read it right after your own .run()).
     sim_net: Any = None
+    # StreamStats of the LAST run_stream on this plan (same sharing caveat).
+    stream_stats: Any = None
     _mesh_fns: list | None = None
+    _local_fn: Any = None
 
     @property
     def field(self) -> Field:
@@ -217,6 +220,64 @@ class DecodePlan:
         else:
             y = DRUNNERS[self.backend](self, v)
         return y[:, 0] if squeeze else y
+
+    def run_stream(self, payload, *, chunk_w: int | None = None):
+        """Streamed repair: generator of (|E|, w) blocks of recomputed
+        symbols; same chunking/pipelining/bitwise contract as
+        `EncodePlan.run_stream` (see api/stream.py).  `payload` carries the
+        K survivor symbols of `plan.kept` along its leading dim."""
+        from ..api import stream
+
+        if not self.erased:
+            def _zeros():
+                for c in stream.iter_chunks(payload, self.spec.K, chunk_w):
+                    yield np.zeros((0, c.shape[1]), np.int64)
+            return _zeros()
+        return stream.run_stream(self, payload, chunk_w=chunk_w)
+
+    def run_batched(self, vs, *, chunk_w: int | None = None) -> list[np.ndarray]:
+        """Repair a batch of survivor payloads (each (K,) or (K, W_i)) in
+        one coalesced streamed execution."""
+        from ..api import stream
+
+        if not self.erased:
+            return [np.zeros((0,) + np.asarray(v).shape[1:], np.int64)
+                    for v in vs]
+        return stream.run_batched(self, vs, chunk_w=chunk_w)
+
+    # -- streaming adapter (see api/stream.py) ------------------------------
+    def _stream_sim_chunk(self, v: np.ndarray) -> np.ndarray:
+        from .backends import run_simulator
+
+        return run_simulator(self, v)
+
+    def _stream_device_fn(self):
+        import jax
+        import numpy as _np
+
+        from .backends import _mesh_callables, local_decode_callable
+
+        q = self.field.q
+
+        def to_device(c):
+            return jax.device_put(
+                _np.ascontiguousarray(c % q).astype(_np.uint32))
+
+        if self.backend == "mesh":
+            fns = _mesh_callables(self)
+            widths = self.tables.batches()
+
+            def dev_fn(vg):
+                return [fn(vg) for fn in fns]
+
+            def finalize(ys):
+                return np.concatenate(
+                    [np.asarray(y, np.int64)[:eb]
+                     for y, (eb, _) in zip(ys, widths)], axis=0)
+
+            return to_device, dev_fn, finalize
+        fn = local_decode_callable(self)
+        return to_device, fn, lambda y: np.asarray(y, np.int64)
 
     def data(self, v) -> np.ndarray:
         """Decode the full original data x (K, W) from the survivors (the

@@ -1,0 +1,255 @@
+"""Streaming execution layer (api/stream.py): chunked `run_stream` and
+coalesced `run_batched` are bitwise-identical to whole-W `run` on both
+planners, the planner auto-selects the NTT fast path on the local backend
+exactly when the spec's point structure allows it, per-chunk simulator
+C1/C2 accounting is exact, and the end-to-end surfaces (streamed coded
+checkpointer, batched coding queue) recover bitwise.
+
+The mesh backend needs forced host devices, so its parity checks live in
+`tests/stream_mesh_checks.py` (run as a CI step, like the api/recover
+mesh checks).
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+from conftest_hypothesis import given, settings, st
+from repro.api import CodeSpec, Encoder
+from repro.api.stream import StreamStats, default_chunk_w, iter_chunks
+from repro.core.field import FERMAT
+from repro.recover import Decoder
+
+f = FERMAT
+BACKENDS = ("simulator", "local")
+
+SPECS = [
+    CodeSpec(kind="rs", K=16, R=4),
+    CodeSpec(kind="rs", K=8, R=8),
+    CodeSpec(kind="lagrange", K=8, R=4),
+    CodeSpec(kind="dft", K=8, R=8),
+    CodeSpec(kind="universal", K=8, R=4, seed=3),
+]
+
+
+def _ids(specs):
+    return [f"{s.kind}_K{s.K}_R{s.R}" for s in specs]
+
+
+# ---------------- encode: run_stream / run_batched --------------------------
+
+@pytest.mark.parametrize("spec", SPECS, ids=_ids(SPECS))
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_encode_stream_bitwise(spec, backend):
+    rng = np.random.default_rng(1)
+    x = f.rand((spec.K, 69), rng)
+    plan = Encoder.plan(spec, backend=backend)
+    ref = plan.run(x)
+    got = np.concatenate(list(plan.run_stream(x, chunk_w=16)), axis=1)
+    assert np.array_equal(ref, got)
+    # ragged explicit chunks are respected and still bitwise-equal
+    chunks = [x[:, :5], x[:, 5:38], x[:, 38:]]
+    got2 = np.concatenate(list(plan.run_stream(chunks)), axis=1)
+    assert np.array_equal(ref, got2)
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_encode_batched_mixed_widths(backend):
+    spec = CodeSpec(kind="rs", K=8, R=4)
+    rng = np.random.default_rng(2)
+    x = f.rand((8, 50), rng)
+    plan = Encoder.plan(spec, backend=backend)
+    ref = plan.run(x)
+    outs = plan.run_batched([x[:, :7], x[:, 7], x[:, 8:50]], chunk_w=16)
+    assert np.array_equal(outs[0], ref[:, :7])
+    assert np.array_equal(outs[1], ref[:, 7])  # 1-D request, 1-D reply
+    assert np.array_equal(outs[2], ref[:, 8:50])
+    assert plan.run_batched([]) == []
+
+
+def test_stream_stats_exact_per_chunk():
+    """Simulator chunks account C1/C2 exactly: each chunk is a full
+    lockstep run, C2 scaling with the chunk width."""
+    spec = CodeSpec(kind="rs", K=8, R=4)
+    plan = Encoder.plan(spec, backend="simulator")
+    x = f.rand((8, 40), np.random.default_rng(3))
+    list(plan.run_stream(x, chunk_w=16))
+    stats = plan.stream_stats
+    assert stats.widths == [16, 16, 8]
+    # per-chunk counters must equal a standalone run of that chunk
+    for w0, w1, c1, c2 in zip([0, 16, 32], [16, 32, 40],
+                              stats.C1, stats.C2):
+        plan.run(x[:, w0:w1])
+        assert (plan.sim_net.C1, plan.sim_net.C2) == (c1, c2)
+    assert stats.chunks == 3 and stats.W == 40
+    assert stats.totals() == (sum(stats.C1), sum(stats.C2))
+
+
+def test_zero_width_batch_matches_run():
+    spec = CodeSpec(kind="rs", K=8, R=4)
+    empty = np.zeros((8, 0), np.int64)
+    enc = Encoder.plan(spec, backend="local")
+    assert enc.run_batched([empty])[0].shape == enc.run(empty).shape == (4, 0)
+    dec = Decoder.plan(spec, erased=(0, 9), backend="local")
+    assert dec.run_batched([empty])[0].shape == dec.run(empty).shape == (2, 0)
+
+
+def test_iter_chunks_validation():
+    with pytest.raises(ValueError):
+        list(iter_chunks(np.zeros((4, 8)), 8, 16))
+    assert default_chunk_w(8) % 128 == 0
+    st_ = StreamStats()
+    assert st_.chunks == 0 and st_.totals() == (0, 0)
+
+
+# ---------------- NTT fast-path selection -----------------------------------
+
+def test_local_fastpath_selection():
+    assert Encoder.plan(CodeSpec(kind="rs", K=16, R=4),
+                        backend="local").local_impl == "ntt"
+    assert Encoder.plan(CodeSpec(kind="dft", K=8, R=8),
+                        backend="local").local_impl == "ntt"
+    assert Encoder.plan(CodeSpec(kind="lagrange", K=8, R=4),
+                        backend="local").local_impl == "ntt"
+    # odd small side: no radix-2 coset structure -> dense fallback
+    assert Encoder.plan(CodeSpec(kind="rs", K=9, R=3),
+                        backend="local").local_impl == "dense"
+    assert Encoder.plan(CodeSpec(kind="universal", K=8, R=4, seed=1),
+                        backend="local").local_impl == "dense"
+
+
+@pytest.mark.parametrize("spec", [
+    CodeSpec(kind="rs", K=16, R=4),     # K > R: block sum
+    CodeSpec(kind="rs", K=4, R=16),     # K < R: beta-block concat
+    CodeSpec(kind="rs", K=12, R=4),     # non-power-of-two K, pow2 blocks
+    CodeSpec(kind="rs", K=8, R=8),
+    CodeSpec(kind="lagrange", K=4, R=8),
+    CodeSpec(kind="dft", K=16, R=16),
+], ids=_ids([CodeSpec(kind="rs", K=16, R=4), CodeSpec(kind="rs", K=4, R=16),
+             CodeSpec(kind="rs", K=12, R=4), CodeSpec(kind="rs", K=8, R=8),
+             CodeSpec(kind="lagrange", K=4, R=8),
+             CodeSpec(kind="dft", K=16, R=16)]))
+def test_ntt_fastpath_bitwise_vs_matrix(spec):
+    """The O(K log K) local path returns exactly x^T A."""
+    rng = np.random.default_rng(4)
+    plan = Encoder.plan(spec, backend="local")
+    assert plan.local_impl == "ntt"
+    x = f.rand((spec.K, 33), rng)
+    assert np.array_equal(plan.run(x), f.matmul(plan.A.T, x))
+
+
+def test_dense_fallback_bitwise_vs_matrix():
+    spec = CodeSpec(kind="rs", K=9, R=3)
+    plan = Encoder.plan(spec, backend="local")
+    assert plan.local_impl == "dense"
+    x = f.rand((9, 21), np.random.default_rng(5))
+    assert np.array_equal(plan.run(x), f.matmul(plan.A.T, x))
+
+
+# ---------------- decode: run_stream / run_batched --------------------------
+
+@pytest.mark.parametrize("erased", [(0, 5, 9), (2,), (8, 9, 10, 11), ()],
+                         ids=["mixed", "one", "all_parity", "none"])
+@pytest.mark.parametrize("backend", BACKENDS)
+def test_decode_stream_bitwise(erased, backend):
+    spec = CodeSpec(kind="rs", K=8, R=4)
+    rng = np.random.default_rng(6)
+    x = f.rand((8, 45), rng)
+    cw = np.concatenate([x % f.q, Encoder.plan(spec, backend="local").run(x)])
+    plan = Decoder.plan(spec, erased=erased, backend=backend)
+    v = cw[list(plan.kept)]
+    ref = plan.run(v)
+    got = np.concatenate(list(plan.run_stream(v, chunk_w=16)), axis=1)
+    assert np.array_equal(ref, got)
+    outs = plan.run_batched([v[:, :10], v[:, 10:]], chunk_w=16)
+    assert np.array_equal(np.concatenate(outs, axis=1), ref)
+
+
+# ---------------- property tests (hypothesis-gated) -------------------------
+
+@settings(max_examples=15, deadline=None)
+@given(data=st.data())
+def test_ragged_chunks_and_erasures_property(data):
+    """Any ragged chunking of any |E| <= R erasure pattern decodes (and
+    encodes) bitwise-identically to the whole-W run."""
+    spec = CodeSpec(kind="rs", K=8, R=4)
+    W = data.draw(st.integers(min_value=1, max_value=40), label="W")
+    # ragged split of [0, W)
+    cuts = data.draw(st.lists(st.integers(min_value=1, max_value=W),
+                              max_size=4, unique=True), label="cuts")
+    bounds = sorted({0, W, *cuts})
+    n_erased = data.draw(st.integers(min_value=0, max_value=4), label="|E|")
+    erased = tuple(data.draw(
+        st.permutations(list(range(12))), label="perm")[:n_erased])
+    rng = np.random.default_rng(W * 37 + n_erased)
+    x = f.rand((8, W), rng)
+
+    enc = Encoder.plan(spec, backend="local")
+    ref = enc.run(x)
+    chunks = [x[:, a:b] for a, b in zip(bounds, bounds[1:])]
+    assert np.array_equal(
+        np.concatenate(list(enc.run_stream(chunks)), axis=1), ref)
+
+    dec = Decoder.plan(spec, erased=erased, backend="local")
+    v = np.concatenate([x % f.q, ref])[list(dec.kept)]
+    dref = dec.run(v)
+    dgot = np.concatenate(
+        list(dec.run_stream([v[:, a:b] for a, b in zip(bounds, bounds[1:])])),
+        axis=1)
+    assert np.array_equal(dref, dgot)
+
+
+# ---------------- end-to-end surfaces ---------------------------------------
+
+def test_checkpoint_streamed_roundtrip_degraded(tmp_path):
+    """Streamed save (parity memmaps) + streamed degraded restore recover
+    the exact state, with chunk_w forcing many chunks."""
+    from repro.ckpt import CodedCheckpointer
+
+    state = {"w": np.arange(4096, dtype=np.float32).reshape(64, 64),
+             "b": np.ones(130, np.float32)}
+    ck = CodedCheckpointer(str(tmp_path), n_shards=8, n_parity=4, chunk_w=128)
+    ck.save(0, state)
+    d = tmp_path / "step_000000"
+    (d / "shard_001.npy").unlink()
+    (d / "shard_004.npy").unlink()
+    (d / "parity_000.npy").unlink()
+    rec = ck.restore(0, state)
+    assert np.array_equal(rec["w"], state["w"])
+    assert np.array_equal(rec["b"], state["b"])
+
+
+def test_coding_queue_coalesces_bitwise():
+    import threading
+
+    from repro.launch.coding_queue import CodingQueue
+
+    spec = CodeSpec(kind="rs", K=8, R=4)
+    rng = np.random.default_rng(8)
+    enc = Encoder.plan(spec, backend="local")
+    erased = (0, 3)
+    dec = Decoder.plan(spec, erased=erased, backend="local")
+
+    q = CodingQueue(backend="local", chunk_w=128)
+    payloads = [f.rand((8, int(w)), rng) for w in rng.integers(3, 40, 12)]
+    futs = []
+
+    def client(x):
+        futs.append(("e", x, q.submit_encode(spec, x)))
+        cw = np.concatenate([x % f.q, enc.run(x)])
+        v = cw[list(dec.kept)]
+        futs.append(("d", v, q.submit_decode(spec, erased, v)))
+
+    threads = [threading.Thread(target=client, args=(x,)) for x in payloads]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    for op, payload, fut in futs:
+        ref = (enc if op == "e" else dec).run(payload)
+        assert np.array_equal(fut.result(timeout=60), ref)
+    q.close()
+    assert q.stats.requests == 24
+    assert q.stats.batches <= q.stats.requests  # some coalescing happened
+    with pytest.raises(RuntimeError):
+        q.submit_encode(spec, payloads[0])
