@@ -6,7 +6,7 @@ import time
 
 import numpy as np
 
-from repro.core import FERMAT, RoundNetwork, decentralized_encode
+from repro.core import FERMAT, decentralized_encode
 from repro.core.cauchy import StructuredGRS
 
 ALPHA, BETA_BITS = 1e-5, 1e-9 * 17

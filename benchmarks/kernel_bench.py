@@ -32,7 +32,7 @@ def rows() -> list[str]:
         out.append(f"kernel/gf_matmul_{M}x{K}x{N},{us_k:.0f},"
                    f"gf_ops={gf_ops};interp_mode=1;ref_us={us_r:.0f}")
 
-    from repro.kernels.ntt import ntt, ntt_ref
+    from repro.kernels.ntt import ntt
 
     for K in (256, 1024):
         W = 128

@@ -9,9 +9,7 @@ import time
 import numpy as np
 
 from repro.core import FERMAT, decentralized_encode
-from repro.core.cost_model import (
-    framework, gather_encode_scatter, multireduce_jeong, universal,
-)
+from repro.core.cost_model import gather_encode_scatter, multireduce_jeong
 
 ALPHA, BETA_BITS = 1e-5, 1e-9 * 17
 

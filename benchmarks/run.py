@@ -19,9 +19,12 @@ the value must satisfy the entry's bound — absolute ``min``/``max`` when
 present (e.g. the NTT speedup ratio's ``min: 1.5``), otherwise relative:
 at most ``us_per_call * (1 + tolerance)`` with ``tolerance`` taken from
 the entry or ``--tolerance`` (default 0.25).  Entries with
-``"better": "higher"`` invert the relative direction.  The JSON artifact
-is still written before the gate fires, so CI uploads it for trend
-inspection even on a failing run.
+``"better": "higher"`` invert the relative direction.  Renames don't
+silently escape the gate: a baseline entry with no measured row FAILS the
+run (remove it from the baseline explicitly), and a measured row in a
+gated section with no baseline entry warns loudly that it is running
+ungated.  The JSON artifact is still written before the gate fires, so CI
+uploads it for trend inspection even on a failing run.
 
 Sections:
 
@@ -81,18 +84,35 @@ def _emit(row: str, acc: dict[str, dict]) -> None:
                          "derived": derived}
 
 
-def _check_baseline(acc: dict[str, dict], baseline_path: str,
-                    tolerance: float, ran_sections: set[str] | None) -> list[str]:
-    """Compare measured entries to the baseline; return failure messages."""
-    base = json.loads(Path(baseline_path).read_text())
+def _check_baseline(acc: dict[str, dict], base: dict[str, dict],
+                    tolerance: float, ran_sections: set[str] | None
+                    ) -> tuple[list[str], list[str]]:
+    """Compare measured entries to the baseline.
+
+    Returns (problems, warnings): `problems` fail the gate — including a
+    baseline entry with no matching measured row (a renamed/dropped
+    benchmark must not silently stop being gated); `warnings` flag the
+    converse, measured rows in a gated section that have no baseline entry
+    and therefore run UNGATED until the baseline is refreshed.
+    """
     problems: list[str] = []
+    gated_sections = {n.split("/", 1)[0] for n in base}
+    warnings = [
+        f"{name}: measured but not in the baseline — NOT gated (add it to "
+        "the baseline, or restore the old row name)"
+        for name in sorted(acc)
+        if name not in base and name.split("/", 1)[0] in gated_sections
+    ]
     for name, b in sorted(base.items()):
         section = name.split("/", 1)[0]
         if ran_sections is not None and section not in ran_sections:
             continue
         cur = acc.get(name)
         if cur is None:
-            problems.append(f"{name}: in baseline but not measured")
+            problems.append(
+                f"{name}: in baseline but not measured — a renamed or "
+                "dropped benchmark must be removed from the baseline "
+                "explicitly")
             continue
         bp, cp = b.get("params"), cur.get("params")
         if bp and cp and bp != cp:
@@ -118,7 +138,7 @@ def _check_baseline(acc: dict[str, dict], baseline_path: str,
             problems.append(
                 f"{name}: {val:.2f}us regressed above {ref:.2f}us "
                 f"* (1 + {tol}) = {ref * (1 + tol):.2f}us")
-    return problems
+    return problems, warnings
 
 
 def main() -> None:
@@ -207,13 +227,20 @@ def main() -> None:
         raise SystemExit(f"benchmark subprocesses failed: {failed}")
     if args.check:
         ran = None if wanted is None else set(wanted)
-        problems = _check_baseline(acc, args.check, args.tolerance, ran)
+        base = json.loads(Path(args.check).read_text())
+        problems, warnings = _check_baseline(acc, base, args.tolerance, ran)
+        if warnings:
+            print("PERF GATE WARNINGS (rows running UNGATED):",
+                  file=sys.stderr)
+            for w in warnings:
+                print(f"  {w}", file=sys.stderr)
         if problems:
             print("PERF REGRESSION GATE FAILED:", file=sys.stderr)
             for p in problems:
                 print(f"  {p}", file=sys.stderr)
             raise SystemExit(1)
-        print(f"perf gate OK against {args.check}", file=sys.stderr)
+        print(f"perf gate OK against {args.check} "
+              f"({len(warnings)} ungated-row warnings)", file=sys.stderr)
 
 
 if __name__ == "__main__":

@@ -11,7 +11,6 @@ C = alpha*C1 + beta*log2(q)*C2 at (alpha=1e-5 s, beta=1e-9 s/bit).
 """
 from __future__ import annotations
 
-import math
 import time
 
 import numpy as np

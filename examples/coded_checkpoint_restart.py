@@ -8,7 +8,6 @@ from pathlib import Path
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
 
 import jax
-import numpy as np
 
 from repro.ckpt import CodedCheckpointer
 from repro.configs import get_config

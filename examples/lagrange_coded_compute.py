@@ -18,7 +18,7 @@ if __name__ == "__main__":
     def poly(v):  # f(v) = v^2 + 3v + 1, degree 2
         return f.add(f.add(f.mul(v, v), f.mul(3, v)), 1)
 
-    print(lcc.encode_plan().describe())  # the unified-API plan behind encode
+    print(lcc.system().describe())  # the CodedSystem session behind encode
     coded = lcc.encode(x)           # paper Sec. VI / Remark 9 encode
     results = poly(coded)           # every worker computes f on its shard
     T = lcc.recovery_threshold(2)

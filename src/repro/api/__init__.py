@@ -1,24 +1,71 @@
-"""Unified encoding API: one planner over simulator, mesh, and kernel
-backends.
+"""Unified coding API: one session handle over the encode and decode
+stacks, one planner layer, one backend registry.
 
-    from repro.api import CodeSpec, Encoder
+The three-line scenario — open a coded system, survive failures, serve
+traffic:
 
-    spec = CodeSpec(kind="rs", K=16, R=4)
-    plan = Encoder.plan(spec, backend="simulator")   # auto-selects algorithm
-    parity = plan.run(x)                             # (R, W) sink values
+    from repro.api import CodeSpec, CodedSystem
 
-The same plan semantics execute on three backends — `"simulator"`
-(RoundNetwork lockstep, measured C1/C2), `"mesh"` (shard_map/ppermute,
-devices as processors), `"local"` (Pallas/jnp kernel) — with bitwise-equal
-sink values.  Host-side tables are cached per spec; see `planner` for the
-cache contract and `spec` for the CodeSpec fields.
+    system = CodedSystem(CodeSpec(kind="rs", K=16, R=4), backend="local")
+    cw = system.codeword(x)      # [x | parity] systematic codeword
+    system.fail([2, 17]); x2 = system.read(cw); system.heal()
+
+Architecture (each layer public, each composing the one below):
+
+    CodedSystem (api.system)   — session: erasure state, auto-replanned
+                                 degraded reads, streamed/batched/queued
+                                 submission, stats
+    Encoder / Decoder planners — plan-then-execute: host tables + schedule
+    (api.planner,                selection resolved once, cached by spec
+     recover.planner)            (x erasure pattern for decode)
+    Backend registry           — `Backend` protocol + `register_backend`;
+    (api.registry,               capability checks at plan time; built-ins
+     api.backends)               simulator / mesh / local
+    kernels / core             — Pallas/jnp GF kernels, NTT fast path,
+                                 shard_map bodies, the round simulator
+
+Plans execute on any registered backend with bitwise-identical results;
+`plan.run_stream`/`run_batched` stream them (api.stream).  Host-side
+tables are cached per spec and shared between the encode and decode
+stacks; `cache_clear()` below clears both sides coherently.
 """
-from .planner import ALPHA_DEFAULT, BETA_BITS_DEFAULT, Encoder, EncodePlan, method_costs
+from .planner import ALPHA_DEFAULT, BETA_BITS_DEFAULT, EncodePlan, Encoder, method_costs
+from .registry import (
+    Backend,
+    BackendCapabilityError,
+    RunStats,
+    available_backends,
+    get_backend,
+    register_backend,
+    unregister_backend,
+)
 from .spec import CodeSpec
 from .stream import StreamStats, default_chunk_w
+from .system import CodedSystem, LinkModel
 
 __all__ = [
-    "CodeSpec", "Encoder", "EncodePlan", "method_costs",
+    "CodeSpec", "CodedSystem", "LinkModel",
+    "Encoder", "EncodePlan", "method_costs",
+    "Backend", "BackendCapabilityError", "RunStats",
+    "register_backend", "unregister_backend", "get_backend",
+    "available_backends",
     "StreamStats", "default_chunk_w",
+    "cache_clear", "cache_info",
     "ALPHA_DEFAULT", "BETA_BITS_DEFAULT",
 ]
+
+
+def cache_clear() -> None:
+    """Clear Encoder plans, Decoder plans, and the shared host-table cache
+    together.  Clearing only the encode side would leave cached decode
+    plans holding references into the dropped host tables — this is the
+    one coordinated entry point (Encoder.cache_clear does the same)."""
+    Encoder.cache_clear()
+
+
+def cache_info() -> dict:
+    """Combined cache statistics of both stacks:
+    {"encode": Encoder.cache_info(), "decode": Decoder.cache_info()}."""
+    from ..recover.planner import Decoder
+
+    return {"encode": Encoder.cache_info(), "decode": Decoder.cache_info()}

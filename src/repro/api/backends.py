@@ -1,14 +1,18 @@
-"""The three interchangeable executors behind `EncodePlan.run`.
+"""The three built-in executors behind `EncodePlan.run`, registered on the
+`api.registry` Backend protocol.
 
     simulator — the round-based `RoundNetwork` lockstep engine (exact numpy
-                oracle; also yields measured C1/C2 on `plan.sim_net`)
+                oracle; measured C1/C2 recorded thread-locally on
+                `plan.last_stats` / `plan.sim_net`)
     mesh      — devices-as-processors `shard_map`/`ppermute` execution (one
                 device per source, sinks overlaid on devices 0..R-1)
     local     — single-device `kernels.ops.encode_blocks` (Pallas/jnp field
                 matmul; no communication schedule at all)
 
 All three return the same sink values bitwise: sink r holds x^T A[:, r] over
-F_q.  Inputs/outputs are normalized to numpy int64 (K, W) -> (R, W).
+F_q.  Inputs/outputs are normalized to numpy int64 (K, W) -> (R, W).  The
+decode halves of the same three backends live in `recover.backends`; the
+`Backend` objects below bind both, so one registry serves both planners.
 """
 from __future__ import annotations
 
@@ -17,13 +21,15 @@ from functools import partial
 import numpy as np
 
 from ..core.dft_a2a import dft_a2a
+from ..core.field import FERMAT_Q
 from ..core.framework import decentralized_encode
 from ..core.simulator import RoundNetwork
+from .registry import Backend, BackendCapabilityError, register_backend
 
 
-def run_simulator(plan, x: np.ndarray) -> np.ndarray:
-    """Execute the plan on the paper's p-port round network; the network
-    (with measured C1/C2) is kept on `plan.sim_net` for inspection."""
+def run_simulator(plan, x: np.ndarray) -> tuple[np.ndarray, RoundNetwork]:
+    """Execute the plan on the paper's p-port round network; returns
+    (sink values, the network with its measured C1/C2)."""
     spec, f = plan.spec, plan.field
     x = f.arr(x)
     if spec.kind == "dft":
@@ -36,8 +42,7 @@ def run_simulator(plan, x: np.ndarray) -> np.ndarray:
         method = "rs" if plan.method == "rs" else "universal"
         y, net = decentralized_encode(f, plan.A, x, p=spec.p, method=method,
                                       sgrs=plan.sgrs)
-    plan.sim_net = net
-    return np.asarray(y, np.int64)
+    return np.asarray(y, np.int64), net
 
 
 def local_encode_callable(plan):
@@ -148,5 +153,82 @@ def run_mesh(plan, x: np.ndarray) -> np.ndarray:
     return y if spec.kind == "dft" else y[: spec.R]
 
 
-RUNNERS = {"simulator": run_simulator, "local": run_local, "mesh": run_mesh}
-BACKENDS = tuple(RUNNERS)
+# ---------------------------------------------------------------------------
+# the built-in Backend registrations (encode halves above, decode halves in
+# recover.backends — imported lazily to keep the api <-> recover import DAG
+# acyclic)
+# ---------------------------------------------------------------------------
+
+
+@register_backend("simulator")
+class SimulatorBackend(Backend):
+    """Exact lockstep oracle on the paper's p-port round network.  Runs any
+    prime modulus; the only backend that measures network cost (exact C1/C2
+    recorded thread-locally on `plan.last_stats`/`plan.sim_net`)."""
+
+    measures_network = True
+
+    def encode(self, plan, x):
+        y, net = run_simulator(plan, x)
+        plan._record_net(net, op="encode")
+        return y
+
+    def decode(self, plan, v):
+        from ..recover.backends import run_simulator as run_dec
+
+        y, net = run_dec(plan, v)
+        plan._record_net(net, op="decode")
+        return y
+
+
+@register_backend("local")
+class LocalBackend(Backend):
+    """Single-device kernel path (NTT fast path / dense Pallas/jnp field
+    matmul).  No communication schedule; uint32 Fermat arithmetic only."""
+
+    supports_stream = True
+    field_note = f"the uint32 kernels are Fermat-only, q={FERMAT_Q}"
+
+    def supports_field(self, q: int) -> bool:
+        return q == FERMAT_Q
+
+    def encode(self, plan, x):
+        return run_local(plan, x)
+
+    def decode(self, plan, v):
+        from ..recover.backends import run_local as run_dec
+
+        return run_dec(plan, v)
+
+
+@register_backend("mesh")
+class MeshBackend(Backend):
+    """Devices-as-processors shard_map/ppermute execution: one jax device
+    per source/survivor.  Fermat-only; encode additionally needs the
+    R | K framework grid (Sec. III-A) for non-dft kinds."""
+
+    supports_stream = True
+    field_note = f"the uint32 kernels are Fermat-only, q={FERMAT_Q}"
+
+    def supports_field(self, q: int) -> bool:
+        return q == FERMAT_Q
+
+    def device_requirement(self, spec) -> int:
+        return spec.K
+
+    def validate(self, spec, op: str = "encode") -> None:
+        # structural mismatch first: it holds on any device count
+        if op == "encode" and spec.kind != "dft" and spec.K % spec.R != 0:
+            raise BackendCapabilityError(
+                f"mesh encode covers the R | K framework grid (Sec. III-A); "
+                f"got K={spec.K}, R={spec.R} — use backend='simulator' or "
+                "'local' for this spec")
+        super().validate(spec, op)
+
+    def encode(self, plan, x):
+        return run_mesh(plan, x)
+
+    def decode(self, plan, v):
+        from ..recover.backends import run_mesh as run_dec
+
+        return run_dec(plan, v)

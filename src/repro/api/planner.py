@@ -25,6 +25,7 @@ is structured).
 from __future__ import annotations
 
 import hashlib
+import threading
 from dataclasses import dataclass, field as dc_field
 from typing import Any, Callable
 
@@ -34,8 +35,9 @@ from ..core import cost_model
 from ..core.cauchy import StructuredGRS, cost_cauchy
 from ..core.cost_model import LinearCost
 from ..core.dft_a2a import cost_dft
-from ..core.field import FERMAT_Q, Field
-from .backends import BACKENDS, RUNNERS, build_mesh_callable
+from ..core.field import Field
+from .backends import build_mesh_callable
+from .registry import PlanStats, get_backend
 from .spec import CodeSpec
 
 # default link model used for auto selection and describe(): ~10us latency,
@@ -176,26 +178,28 @@ def _resolve_method(spec: CodeSpec, sgrs: StructuredGRS | None, method: str
 # ---------------------------------------------------------------------------
 
 @dataclass
-class EncodePlan:
+class EncodePlan(PlanStats):
     """An executable encode: spec + resolved method + backend + host tables.
 
     Obtained from `Encoder.plan`; cached, so hold on to it (or re-call
     `Encoder.plan` — both hit the cache) and call `.run` per payload.
+
+    Plans are shared across callers AND threads; per-run measurements
+    (`last_stats`, `sim_net`, `stream_stats` — see `registry.PlanStats`)
+    are thread-local, so every thread reads the stats of its own last run.
     """
+
+    op = "encode"  # stream/backend dispatch discriminator (not a field)
 
     spec: CodeSpec
     backend: str
     method: str
     tables: HostTables
     costs: dict[str, LinearCost]
-    # RoundNetwork of the LAST simulator run on this plan.  Plans are cached
-    # and shared — read sim_net immediately after your own .run(), not later
-    # (another caller's run overwrites it).
-    sim_net: Any = None
-    # StreamStats of the LAST run_stream on this plan (same sharing caveat).
-    stream_stats: Any = None
     _mesh_fn: Callable | None = None
     _local_fn: Callable | None = None
+    # thread-local per-run stats storage (PlanStats reads/writes this)
+    _tls: Any = dc_field(default_factory=threading.local, repr=False)
 
     @property
     def field(self) -> Field:
@@ -217,7 +221,8 @@ class EncodePlan:
             raise ValueError(f"x must have leading dim K={self.spec.K}, "
                              f"got {x.shape}")
         squeeze = x.ndim == 1
-        y = RUNNERS[self.backend](self, x[:, None] if squeeze else x)
+        y = get_backend(self.backend).encode(self, x[:, None] if squeeze
+                                             else x)
         return y[:, 0] if squeeze else y
 
     def run_stream(self, payload, *, chunk_w: int | None = None):
@@ -248,10 +253,10 @@ class EncodePlan:
         return "ntt" if self.tables.ntt_params() is not None else "dense"
 
     # -- streaming adapter (see api/stream.py) ------------------------------
-    def _stream_sim_chunk(self, x: np.ndarray) -> np.ndarray:
+    def _stream_sim_chunk(self, x: np.ndarray):
         from .backends import run_simulator
 
-        return run_simulator(self, x)
+        return run_simulator(self, x)  # (y, RoundNetwork) pair
 
     def _stream_device_fn(self):
         import jax
@@ -325,19 +330,17 @@ class Encoder:
         """Plan an encode: resolve the algorithm, build-or-reuse host tables,
         and return the cached executable plan.
 
-        backend: "simulator" | "mesh" | "local"
+        backend: a registered backend name — "simulator" | "mesh" |
+                 "local" built in, plus anything added via
+                 `api.register_backend` (capability-checked here, at plan
+                 time, via `Backend.validate`)
         method : "auto" (cost-model argmin) | "universal" | "rs" | "dft"
         A      : explicit (K, R) generator block — required for
                  kind="universal" specs without a seed; allowed for
                  kind="lagrange" with arbitrary (unstructured) points, in
                  which case only the universal schedule applies.
         """
-        if backend not in BACKENDS:
-            raise ValueError(f"unknown backend {backend!r}; " f"expected one of {BACKENDS}")
-        if backend in ("local", "mesh") and spec.q != FERMAT_Q:
-            raise ValueError(
-                f"backend {backend!r} runs the uint32 Fermat kernels "
-                f"(q={FERMAT_Q} only); use backend='simulator' for q={spec.q}")
+        get_backend(backend).validate(spec, op="encode")
         digest = _digest(A)
         plan_key = (spec, backend, method, digest)
         hit = _PLANS.get(plan_key)
@@ -365,7 +368,26 @@ class Encoder:
 
     @classmethod
     def cache_clear(cls) -> None:
-        _PLANS.clear()
-        _TABLES.clear()
-        for k in _STATS:
-            _STATS[k] = 0
+        """Coordinated clear of ALL plan/table caches — encode plans, the
+        shared host-table cache, AND the decode caches (decode tables hold
+        references into the encoder's host tables, so clearing only the
+        encode side would leave decode plans serving stale tables).  Same
+        entry point as `repro.api.cache_clear()`."""
+        import sys
+
+        _clear_encoder_state()
+        # decode caches exist only once the recover stack was imported;
+        # an encode-only process has nothing stale and skips the import
+        _rplanner = sys.modules.get(
+            __package__.rsplit(".", 1)[0] + ".recover.planner")
+        if _rplanner is not None:
+            _rplanner._clear_decoder_state()
+
+
+def _clear_encoder_state() -> None:
+    """Drop the encode-side caches only (see `Encoder.cache_clear` for the
+    coordinated clear applications should use)."""
+    _PLANS.clear()
+    _TABLES.clear()
+    for k in _STATS:
+        _STATS[k] = 0

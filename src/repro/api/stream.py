@@ -33,7 +33,7 @@ Bitwise contract (tested across all backends and both planners):
 from __future__ import annotations
 
 from dataclasses import dataclass, field as dc_field
-from typing import Any, Callable, Iterable, Iterator
+from typing import Callable, Iterable, Iterator
 
 import numpy as np
 
@@ -119,26 +119,36 @@ def run_stream(plan, payload, *, chunk_w: int | None = None
                ) -> Iterator[np.ndarray]:
     """Generator of per-chunk outputs for `plan` (encode or decode).
 
-    The plan supplies the backend-specific pieces via a small adapter
-    protocol: `_stream_sim_chunk(x)` (simulator lockstep run returning the
-    chunk's output with `plan.sim_net` freshly set) and
-    `_stream_device_fn()` -> (to_device, dev_fn, finalize) for the
-    local/mesh paths.
+    Dispatch follows the plan's registered backend capabilities: a
+    network-measuring backend (simulator) runs lockstep per chunk and
+    records exact per-chunk C1/C2 on `plan.stream_stats`; a
+    `supports_stream` backend (local/mesh) supplies the double-buffered
+    device pipeline via the plan's `_stream_device_fn()` adapter; any
+    other registered backend streams by plain per-chunk `encode`/`decode`
+    calls — no pipelining, but the bitwise contract still holds.
     """
+    from .registry import get_backend
+
     chunks = iter_chunks(payload, plan.spec.K, chunk_w)
-    if plan.backend == "simulator":
+    backend = get_backend(plan.backend)
+    if backend.measures_network:
         stats = StreamStats()
         plan.stream_stats = stats
         for c in chunks:
-            y = plan._stream_sim_chunk(c)
-            net = plan.sim_net
+            y, net = plan._stream_sim_chunk(c)
             stats.widths.append(c.shape[1])
             stats.C1.append(net.C1)
             stats.C2.append(net.C2)
+            plan._record_net(net, op=plan.op)
             yield y
         return
-    to_device, dev_fn, finalize = plan._stream_device_fn()
-    yield from _pipelined(chunks, to_device, dev_fn, finalize)
+    if backend.supports_stream:
+        to_device, dev_fn, finalize = plan._stream_device_fn()
+        yield from _pipelined(chunks, to_device, dev_fn, finalize)
+        return
+    run_chunk = backend.encode if plan.op == "encode" else backend.decode
+    for c in chunks:
+        yield run_chunk(plan, c)
 
 
 def run_batched(plan, xs, *, chunk_w: int | None = None) -> list[np.ndarray]:

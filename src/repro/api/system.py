@@ -1,0 +1,361 @@
+"""CodedSystem: one session handle over the encode AND decode stacks.
+
+The paper treats encoding and repair as two faces of one decentralized
+system — decode is scheduled *as* an all-to-all encode among survivors —
+and applications continually move between healthy encodes and degraded
+reads.  `CodedSystem` owns both planners, the shared host-table cache and
+the live erasure state, so "open a coded system, survive failures, serve
+traffic" is three lines:
+
+    from repro.api import CodeSpec, CodedSystem
+
+    system = CodedSystem(CodeSpec(kind="rs", K=16, R=4), backend="local")
+    cw = system.codeword(x)        # [x | parity] systematic codeword (N, W)
+    system.fail([2, 17])           # processors 2 and 17 go dark
+    x2 = system.read(cw)           # degraded read — auto-replanned decode
+    system.heal()                  # back to healthy encodes
+
+Underneath, `Encoder.plan` / `Decoder.plan` remain the public planner
+layer this composes: `system.encode_plan` and `system.decode_plan` expose
+the live plans, decode plans are re-planned automatically whenever the
+erasure pattern changes (and cached per pattern via the Decoder's LRU),
+and every execution runs on the registered `Backend` the session was
+opened with.  `system.submit(...)` returns futures through a lazily
+started `CodingQueue` that coalesces concurrent requests into batched
+streamed executions.
+
+Payload conventions (mirroring the planners):
+
+  * `encode(x)` takes the (K, W) data block, returns (R, W) parity.
+  * `decode(v)` / `read(v)` accept EITHER the full (N, W) codeword
+    row-stack (rows at failed positions are ignored) OR the (K, W)
+    survivor symbols ordered like `system.kept` — the leading dimension
+    disambiguates (N = K + R > K always).
+  * 1-D inputs are treated as W = 1 and squeezed on return.
+
+Thread safety: erasure-state transitions (`fail`/`heal`) and queue
+lifecycle are lock-protected; per-run measured stats are thread-local on
+the plans (`plan.last_stats`), surfaced through `system.stats()`.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass
+from typing import Any, Iterable, Iterator
+
+import numpy as np
+
+from .planner import ALPHA_DEFAULT, BETA_BITS_DEFAULT, EncodePlan, Encoder
+from .registry import get_backend
+from .spec import CodeSpec
+
+
+@dataclass(frozen=True)
+class LinkModel:
+    """The paper's linear link-cost model C = alpha*C1 + beta_bits*C2.
+
+    alpha     — per-round latency in seconds (Table I's alpha)
+    beta_bits — seconds per field element per port, i.e. beta * ceil(log2 q)
+
+    Used by the system for cost reporting (`stats()`/`describe()`); the
+    defaults are the constants the demos and benchmarks report with.
+    """
+
+    alpha: float = ALPHA_DEFAULT
+    beta_bits: float = BETA_BITS_DEFAULT
+
+    def us(self, cost: Any) -> float:
+        """Model microseconds of an analytic `LinearCost` or a measured
+        `RunStats` (anything with `.total(alpha, beta_bits)`)."""
+        return cost.total(self.alpha, self.beta_bits) * 1e6
+
+
+class CodedSystem:
+    """Session handle: spec + backend + live erasure state (see module
+    docstring for the three-line scenario).
+
+    Parameters
+    ----------
+    spec    : the `CodeSpec` (what code, what system shape)
+    backend : registered backend name; capability-checked at construction
+              (unsupported pairs raise `BackendCapabilityError` here, not
+              mid-run)
+    method  : encode schedule ("auto" = Table-I cost-model argmin)
+    A       : explicit generator block (kind="universal"/"lagrange")
+    link    : `LinkModel` for cost reporting
+    chunk_w : default streaming chunk width for `*_stream`/queue paths
+    """
+
+    def __init__(self, spec: CodeSpec, backend: str = "simulator", *,
+                 method: str = "auto", A: np.ndarray | None = None,
+                 link: LinkModel | None = None, chunk_w: int | None = None):
+        self.spec = spec
+        self.backend = backend
+        self.link = link or LinkModel()
+        self.chunk_w = chunk_w
+        self._A = A
+        # eager plan: all capability checks + host-table builds happen now
+        self._enc: EncodePlan = Encoder.plan(spec, backend=backend,
+                                             method=method, A=A)
+        self._failed: set[int] = set()
+        self._dplan: Any = None          # decode plan for current pattern
+        self._queue: Any = None
+        self._lock = threading.RLock()
+
+    # -- plans --------------------------------------------------------------
+    @property
+    def encode_plan(self) -> EncodePlan:
+        """The live `EncodePlan` (the still-public planner layer)."""
+        return self._enc
+
+    @property
+    def decode_plan(self):
+        """The `DecodePlan` for the CURRENT erasure pattern — re-planned
+        on pattern change, cached per pattern (Decoder LRU + this handle).
+        Raises `UndecodableError` for information-losing patterns
+        (possible only for the non-MDS dft codeword)."""
+        with self._lock:
+            pattern = tuple(sorted(self._failed))
+            if self._dplan is None or self._dplan.erased != pattern:
+                from ..recover import Decoder
+
+                self._dplan = Decoder.plan(self.spec, erased=pattern,
+                                           backend=self.backend, A=self._A)
+            return self._dplan
+
+    # -- erasure state ------------------------------------------------------
+    @property
+    def failed(self) -> tuple[int, ...]:
+        """Sorted codeword positions currently failed (data k < K, parity
+        K + r)."""
+        with self._lock:
+            return tuple(sorted(self._failed))
+
+    @property
+    def kept(self) -> tuple[int, ...]:
+        """The K survivor positions reads consume, in input-row order
+        (simply 0..K-1 while the system is healthy)."""
+        if not self.failed:
+            return tuple(range(self.spec.K))
+        return self.decode_plan.kept
+
+    def fail(self, procs) -> "CodedSystem":
+        """Mark processors failed (int or iterable of codeword positions).
+        Cumulative; at most R total — beyond that no code can help, so the
+        transition is refused rather than discovered at read time."""
+        if isinstance(procs, (int, np.integer)):
+            procs = (procs,)
+        procs = {int(e) for e in procs}
+        bad = [e for e in procs if not 0 <= e < self.spec.N]
+        if bad:
+            raise ValueError(
+                f"positions {bad} outside the codeword [0, {self.spec.N})")
+        with self._lock:
+            new = self._failed | procs
+            if len(new) > self.spec.R:
+                raise ValueError(
+                    f"{len(new)} failures exceed the code's R="
+                    f"{self.spec.R} (currently failed: "
+                    f"{sorted(self._failed)})")
+            self._failed = new
+        return self
+
+    def heal(self, procs=None) -> "CodedSystem":
+        """Mark processors recovered (default: all of them).  Positions
+        are validated like `fail`'s — a typo'd heal must not silently
+        leave the system degraded."""
+        with self._lock:
+            if procs is None:
+                self._failed.clear()
+                return self
+            if isinstance(procs, (int, np.integer)):
+                procs = (procs,)
+            procs = {int(e) for e in procs}
+            bad = [e for e in procs if not 0 <= e < self.spec.N]
+            if bad:
+                raise ValueError(
+                    f"positions {bad} outside the codeword "
+                    f"[0, {self.spec.N})")
+            self._failed -= procs
+        return self
+
+    # -- encode -------------------------------------------------------------
+    def encode(self, x) -> np.ndarray:
+        """Encode data x (K,)/(K, W) -> parity (R,)/(R, W)."""
+        return self._enc.run(x)
+
+    def codeword(self, x) -> np.ndarray:
+        """The full systematic codeword [x | parity]: (K, W) -> (N, W)."""
+        x = np.asarray(x)
+        parity = self._enc.run(x)
+        data = (x % self.spec.q).astype(np.int64)
+        return np.concatenate([data, parity], axis=0)
+
+    def encode_stream(self, payload, *, chunk_w: int | None = None
+                      ) -> Iterator[np.ndarray]:
+        """Streamed encode: generator of (R, w) parity blocks (see
+        `EncodePlan.run_stream`)."""
+        return self._enc.run_stream(payload, chunk_w=chunk_w or self.chunk_w)
+
+    def encode_batched(self, xs, *, chunk_w: int | None = None
+                       ) -> list[np.ndarray]:
+        """Encode a batch of payloads in one coalesced streamed run."""
+        return self._enc.run_batched(xs, chunk_w=chunk_w or self.chunk_w)
+
+    # -- decode / degraded read ---------------------------------------------
+    def _survivor_view(self, v, plan) -> np.ndarray:
+        """Normalize (N, ...) codeword rows or (K, ...) kept-ordered
+        survivor symbols to the (K, ...) form `plan` consumes.  The plan
+        is passed in (not re-resolved from the live erasure state) so one
+        operation slices and executes against ONE pattern even if a
+        concurrent `fail`/`heal` lands mid-flight."""
+        v = np.asarray(v)
+        if v.shape[0] == self.spec.N:
+            return v[list(plan.kept)]
+        if v.shape[0] == self.spec.K:
+            return v
+        raise ValueError(
+            f"expected the full (N={self.spec.N}, ...) codeword or the "
+            f"(K={self.spec.K}, ...) survivor symbols of system.kept, got "
+            f"leading dim {v.shape[0]}")
+
+    def decode(self, v) -> np.ndarray:
+        """Recompute the symbols at the failed positions from survivors:
+        returns (|failed|,)/(|failed|, W) rows ordered like
+        `system.failed` (empty while healthy)."""
+        plan = self.decode_plan  # pinned: one pattern for slice + run
+        return plan.run(self._survivor_view(v, plan))
+
+    def read(self, v) -> np.ndarray:
+        """Degraded read: the full original data (K,)/(K, W) from the
+        survivors.  Healthy systems read the data rows directly; with
+        failures this runs the cached decode plan's data path."""
+        v = np.asarray(v)
+        if not self.failed:
+            if v.shape[0] not in (self.spec.N, self.spec.K):
+                raise ValueError(
+                    f"expected (N={self.spec.N}, ...) or (K={self.spec.K},"
+                    f" ...) rows, got leading dim {v.shape[0]}")
+            return (v[: self.spec.K] % self.spec.q).astype(np.int64)
+        plan = self.decode_plan  # pinned: one pattern for slice + data
+        return plan.data(self._survivor_view(v, plan))
+
+    def decode_stream(self, payload, *, chunk_w: int | None = None
+                      ) -> Iterator[np.ndarray]:
+        """Streamed repair: generator of (|failed|, w) blocks.  `payload`
+        is a (N, W)/(K, W) array or an iterable of such chunks (each
+        sliced to survivors as needed).  The erasure pattern is pinned
+        when the stream is created; later `fail`/`heal` calls do not
+        affect chunks already in flight."""
+        plan = self.decode_plan
+        pieces: Iterable = ((payload,) if hasattr(payload, "shape")
+                            else payload)
+
+        def _sliced():
+            for piece in pieces:
+                yield self._survivor_view(piece, plan)
+
+        return plan.run_stream(_sliced(), chunk_w=chunk_w or self.chunk_w)
+
+    # -- batched submission (coding queue) ----------------------------------
+    def _ensure_queue(self):
+        with self._lock:
+            if self._queue is None:
+                from ..launch.coding_queue import CodingQueue
+
+                self._queue = CodingQueue(backend=self.backend,
+                                          chunk_w=self.chunk_w)
+            return self._queue
+
+    def submit(self, op: str, payload):
+        """Submit an "encode" or "decode" request; returns a
+        `concurrent.futures.Future`.  Requests are coalesced with other
+        in-flight submissions sharing the same plan into single batched
+        streamed executions (`launch.coding_queue.CodingQueue`).  Decode
+        submissions are pinned to the erasure pattern at submit time."""
+        if op == "encode":
+            return self._ensure_queue().submit_encode(self.spec, payload,
+                                                      A=self._A)
+        if op == "decode":
+            plan = self.decode_plan  # pin ONE pattern for slice + queue
+            v = self._survivor_view(payload, plan)
+            return self._ensure_queue().submit_decode(self.spec, plan.erased,
+                                                      v, A=self._A)
+        raise ValueError(f"op must be 'encode' or 'decode', got {op!r}")
+
+    def submit_encode(self, x):
+        return self.submit("encode", x)
+
+    def submit_decode(self, v):
+        return self.submit("decode", v)
+
+    # -- lifecycle / introspection ------------------------------------------
+    def close(self) -> None:
+        """Drain and stop the coding queue (no-op if never started).  The
+        session stays usable — a later `submit` lazily opens a fresh
+        queue; direct `encode`/`read`/... never involve the queue."""
+        with self._lock:
+            queue, self._queue = self._queue, None
+        if queue is not None:
+            queue.close()
+
+    def __enter__(self) -> "CodedSystem":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    def stats(self) -> dict:
+        """One coherent snapshot: erasure state, per-plan model costs and
+        this thread's last measured run stats, queue coalescing counters,
+        and the shared cache statistics."""
+        enc = self._enc
+        out: dict = {
+            "spec": self.spec,
+            "backend": self.backend,
+            "failed": self.failed,
+            "encode": {
+                "method": enc.method,
+                "cost": enc.cost(),
+                "model_us": self.link.us(enc.cost()),
+                "last": enc.last_stats,
+            },
+        }
+        if self.failed:
+            plan = self.decode_plan
+            out["decode"] = {
+                "erased": plan.erased,
+                "kept": plan.kept,
+                "cost": plan.cost(),
+                "model_us": self.link.us(plan.cost()),
+                "last": plan.last_stats,
+            }
+        with self._lock:
+            if self._queue is not None:
+                # snapshot, not the live object: the worker thread keeps
+                # mutating QueueStats after this call returns
+                from ..launch.coding_queue import QueueStats
+
+                live = self._queue.stats
+                out["queue"] = QueueStats(live.requests, live.batches,
+                                          list(live.coalesced))
+        from . import cache_info
+
+        out["cache"] = cache_info()
+        return out
+
+    def describe(self) -> str:
+        s = self.spec
+        be = get_backend(self.backend)
+        lines = [
+            f"CodedSystem[{s.kind}] K={s.K} R={s.R} p={s.p} W={s.W} "
+            f"q={s.q} backend={self.backend}",
+            f"  failed  : {list(self.failed) or 'none'}",
+            f"  caps    : stream={'device-pipelined' if be.supports_stream else 'per-chunk'}, "
+            f"network-measuring={be.measures_network}",
+        ]
+        lines += ["  " + ln for ln in self._enc.describe().splitlines()]
+        if self.failed:
+            lines += ["  " + ln
+                      for ln in self.decode_plan.describe().splitlines()]
+        return "\n".join(lines)

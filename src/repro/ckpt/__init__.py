@@ -1,3 +1,3 @@
-from .checkpoint import CodedCheckpointer, tree_to_bytes, bytes_to_tree
+from .checkpoint import CodedCheckpointer, bytes_to_tree, tree_to_bytes
 
 __all__ = ["CodedCheckpointer", "tree_to_bytes", "bytes_to_tree"]

@@ -15,9 +15,10 @@ axis (no central encoder); here the host-side `encode_parity` reuses the
 same StructuredGRS code so restore logic is identical.
 
 Restore tolerates up to R missing shards (any-N-of-(N+R) MDS property,
-validated in tests): shard/parity files missing from disk are detected and
-decoded around automatically via `repro.recover.Decoder` (degraded read —
-the same `DecodePlan` the survivors would execute in-network).  Elastic
+validated in tests): shard/parity files missing from disk are detected,
+`fail()`-ed on a restore-scoped `repro.api.CodedSystem` session, and
+decoded around automatically (degraded read — the same `DecodePlan` the
+survivors would execute in-network).  Elastic
 resharding is supported: a checkpoint written with N shards restores onto
 any N' (the flat symbol stream is re-split).
 
@@ -38,9 +39,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..api import CodeSpec, Encoder
+from ..api import CodedSystem, CodeSpec
 from ..core.field import FERMAT, bytes_to_symbols, symbols_to_bytes
-from ..recover import Decoder
 
 
 # ---------------------------------------------------------------------------
@@ -105,18 +105,21 @@ class CodedCheckpointer:
     def __post_init__(self):
         self.field = self.field or FERMAT
         assert self.n_shards % self.n_parity == 0, "R | N (Remark 4)"
-        # unified encoding API: the plan carries the StructuredGRS code and
-        # its generator block; the plan cache means repeated checkpointer
-        # instances (reshard, restarts) never rebuild the code tables.
-        # The uint32 kernel backend is Fermat-only; other fields fall back
-        # to the exact host matmul (same generator block either way).
+        # one CodedSystem session owns both coding directions: the encode
+        # plan carries the StructuredGRS code and its generator block, and
+        # degraded restores replan the decode side per erasure pattern.
+        # The shared plan caches mean repeated checkpointer instances
+        # (reshard, restarts) never rebuild the code tables.  The uint32
+        # kernel backend is Fermat-only; other fields fall back to the
+        # exact host matmul for parity (same generator block either way).
         spec = CodeSpec(kind="rs", K=self.n_shards, R=self.n_parity,
                         q=self.field.q)
-        self._plan = (Encoder.plan(spec, backend="local")
-                      if self.field.q == FERMAT.q else None)
-        meta = self._plan or Encoder.plan(spec, backend="simulator")
-        self.sgrs = meta.sgrs
-        self._A = meta.A
+        self._fermat = self.field.q == FERMAT.q
+        self._system = CodedSystem(
+            spec, backend="local" if self._fermat else "simulator",
+            chunk_w=self.chunk_w)
+        self.sgrs = self._system.encode_plan.sgrs
+        self._A = self._system.encode_plan.A
         Path(self.directory).mkdir(parents=True, exist_ok=True)
 
     # -- encode -------------------------------------------------------------
@@ -130,19 +133,19 @@ class CodedCheckpointer:
     def encode_parity(self, shards: np.ndarray) -> np.ndarray:
         """(R, L) parity — same code the in-network mesh encode computes.
 
-        Runs through `Encoder.plan(..., backend="local").run`, i.e. the
-        kernels.ops encode path (previously a host-side field.matmul);
-        non-Fermat fields keep the exact host matmul."""
-        if self._plan is None:
+        Runs through `CodedSystem.encode`, i.e. the kernels.ops encode
+        path (previously a host-side field.matmul); non-Fermat fields keep
+        the exact host matmul."""
+        if not self._fermat:
             return self.field.matmul(self._A.T, shards)
-        return self._plan.run(shards)
+        return self._system.encode(shards)
 
     def _parity_stream(self, shards: np.ndarray):
-        """Generator of (R, w) parity blocks — `EncodePlan.run_stream` on
-        the kernel path (cached chunk callables, NTT fast path when the
+        """Generator of (R, w) parity blocks — `CodedSystem.encode_stream`
+        on the kernel path (cached chunk callables, NTT fast path when the
         shard counts allow it), exact chunked host matmul otherwise."""
-        if self._plan is not None:
-            yield from self._plan.run_stream(shards, chunk_w=self.chunk_w)
+        if self._fermat:
+            yield from self._system.encode_stream(shards)
             return
         from ..api.stream import iter_chunks
 
@@ -250,9 +253,14 @@ class CodedCheckpointer:
             assert len(erased) <= R, "more failures than parity can cover"
             spec = CodeSpec(kind="rs", K=N, R=R,
                             q=int(meta.get("q", self.field.q)))
-            plan = Decoder.plan(
-                spec, erased=tuple(sorted(erased)),
-                backend="local" if spec.q == FERMAT.q else "simulator")
+            # a restore-scoped CodedSystem session for the file's (N, R)
+            # layout (may differ from self under elastic reshard): fail
+            # the missing positions, then stream the degraded read
+            rsys = CodedSystem(
+                spec, backend="local" if spec.q == FERMAT.q else "simulator",
+                chunk_w=self.chunk_w)
+            rsys.fail(sorted(erased))
+            plan = rsys.decode_plan
             # repair only the |E| lost columns (K x |E| work) instead of
             # re-deriving all K data shards through the full K x K solve;
             # repaired rows for missing *parity* files ride along unused
@@ -275,7 +283,7 @@ class CodedCheckpointer:
                                     for i in plan.kept])
 
             col = 0
-            for blk in plan.run_stream(survivor_chunks()):
+            for blk in rsys.decode_stream(survivor_chunks()):
                 for j, e in enumerate(plan.erased):
                     rep[e][col : col + blk.shape[1]] = blk[j]
                 col += blk.shape[1]

@@ -45,21 +45,25 @@ class GradientCoder:
             B[w, self.parts_for_worker(w)] = 1.0
         return B
 
-    def encode_plan(self, backend: str = "local", q: int = 65537):
-        """Unified-API plan for the fractional-repetition encode.
+    def system(self, backend: str = "local", q: int = 65537):
+        """`CodedSystem` session for the fractional-repetition encode.
 
-        `plan.run(parts)` computes worker reports B @ parts over F_q — the
-        field-quantized path for running gradient-code group sums through
-        the decentralized encoder (plan.run's sink r = worker r's report,
-        so the plan matrix is B^T).  Float training keeps using
+        `system.encode(parts)` computes worker reports B @ parts over F_q —
+        the field-quantized path for running gradient-code group sums
+        through the decentralized encoder (sink r = worker r's report, so
+        the session matrix is B^T).  Float training keeps using
         `coded_gradient`; this is the integer/fixed-point route and the
         mesh-backend schedule for it."""
-        from ..api import CodeSpec, Encoder
+        from ..api import CodedSystem, CodeSpec
 
         spec = CodeSpec(kind="universal", K=self.n_workers, R=self.n_workers,
                         q=q)
-        return Encoder.plan(spec, backend=backend,
-                            A=self.encode_matrix().T.astype(np.int64))
+        return CodedSystem(spec, backend=backend,
+                           A=self.encode_matrix().T.astype(np.int64))
+
+    def encode_plan(self, backend: str = "local", q: int = 65537):
+        """The planner-layer `EncodePlan` behind `system(backend, q)`."""
+        return self.system(backend, q).encode_plan
 
     def decode_weights(self, alive: np.ndarray) -> np.ndarray:
         """alive: (n,) bool. Returns a (n,) weight vector a with

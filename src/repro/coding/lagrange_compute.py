@@ -15,7 +15,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from ..api import CodeSpec, Encoder, EncodePlan
+from ..api import CodedSystem, CodeSpec, EncodePlan
 from ..core.field import Field
 from ..core.matrices import lagrange_matrix
 
@@ -39,30 +39,34 @@ class LagrangeComputer:
         pts = np.arange(1, K + N + 1, dtype=np.int64)
         return LagrangeComputer(field, pts[:K], pts[K:])
 
-    def encode_plan(self, backend: str | None = None) -> EncodePlan:
-        """The unified-API plan for this computer's Lagrange matrix.
+    def system(self, backend: str | None = None) -> CodedSystem:
+        """The `CodedSystem` session for this computer's Lagrange matrix.
 
         Arbitrary (unstructured) interpolation points, so the planner
-        schedules the universal algorithm; the plan (and its Lagrange
-        matrix) is memoized here and in the Encoder cache across encodes.
-        Default backend: the local kernel for F_65537, the exact simulator
-        for other fields (the uint32 kernels are Fermat-only)."""
+        schedules the universal algorithm; the session (and its Lagrange
+        matrix) is memoized here and in the shared plan caches across
+        encodes.  Default backend: the local kernel for F_65537, the exact
+        simulator for other fields (the uint32 kernels are Fermat-only)."""
         if backend is None:
             backend = "local" if self.field.q == 65537 else "simulator"
-        cached = self.__dict__.get(f"_plan_{backend}")
+        cached = self.__dict__.get(f"_system_{backend}")
         if cached is None:
             L = lagrange_matrix(self.field, self.alphas, self.betas)
             spec = CodeSpec(kind="lagrange", K=self.K, R=self.N, q=self.field.q)
-            cached = Encoder.plan(spec, backend=backend, A=L)
-            object.__setattr__(self, f"_plan_{backend}", cached)
+            cached = CodedSystem(spec, backend=backend, A=L)
+            object.__setattr__(self, f"_system_{backend}", cached)
         return cached
+
+    def encode_plan(self, backend: str | None = None) -> EncodePlan:
+        """The planner-layer `EncodePlan` behind `system(backend)`."""
+        return self.system(backend).encode_plan
 
     def encode(self, x: np.ndarray) -> np.ndarray:
         """x: (K, W) -> coded (N, W) = L^T x, L = V_alpha^-1 V_beta.
 
-        Executes via `Encoder.plan(...).run` on the local kernel backend
+        Executes via `CodedSystem.encode` on the local kernel backend
         (previously an inline field.matmul)."""
-        return self.encode_plan().run(x)
+        return self.system().encode(x)
 
     def recovery_threshold(self, deg: int) -> int:
         return deg * (self.K - 1) + 1

@@ -30,11 +30,17 @@ Legacy direct call sites (`decentralized_encode(...)`,
 `Encoder.plan` — the planner is the only layer that caches tables and
 selects algorithms; prefer it in new code.
 """
-from .field import FERMAT, FERMAT_Q, Field
-from .simulator import FailedProcessorError, Msg, RoundNetwork, run_lockstep
-from .prepare_shoot import cost_universal, prepare_shoot, universal_a2a
+from . import cost_model
+from .cauchy import (
+    StructuredGRS as StructuredGRSCode,
+    cauchy_a2a,
+    cost_cauchy,
+    lagrange_a2a,
+)
 from .dft_a2a import cost_dft, dft_a2a
 from .draw_loose import cost_draw_loose, draw_loose
+from .field import FERMAT, FERMAT_Q, Field
+from .framework import decentralized_encode, nonsystematic_encode
 from .matrices import (
     StructuredPoints,
     SystematicGRS,
@@ -44,10 +50,8 @@ from .matrices import (
     permuted_dft_matrix,
     vandermonde,
 )
-from .cauchy import StructuredGRS as StructuredGRSCode
-from .cauchy import cauchy_a2a, cost_cauchy, lagrange_a2a
-from .framework import decentralized_encode, nonsystematic_encode
-from . import cost_model
+from .prepare_shoot import cost_universal, prepare_shoot, universal_a2a
+from .simulator import FailedProcessorError, Msg, RoundNetwork, run_lockstep
 
 __all__ = [
     "FERMAT", "FERMAT_Q", "Field", "FailedProcessorError", "Msg",

@@ -30,7 +30,6 @@ import numpy as np
 from .draw_loose import cost_draw_loose, draw_loose
 from .field import Field
 from .matrices import StructuredPoints, SystematicGRS, _prod
-from .simulator import run_lockstep
 
 
 @dataclass(frozen=True)

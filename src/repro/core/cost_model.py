@@ -9,10 +9,10 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-from .prepare_shoot import cost_universal, phase_split
+from .collectives import cost_broadcast
 from .dft_a2a import cost_dft
 from .draw_loose import cost_draw_loose
-from .collectives import cost_broadcast
+from .prepare_shoot import cost_universal
 
 
 @dataclass(frozen=True)

@@ -16,7 +16,7 @@ import numpy as np
 
 from .field import Field
 from .matrices import gauss_inverse, vandermonde
-from .prepare_shoot import prepare_shoot, cost_universal
+from .prepare_shoot import cost_universal, prepare_shoot
 from .simulator import run_lockstep
 
 

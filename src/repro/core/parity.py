@@ -20,25 +20,23 @@ from __future__ import annotations
 import math
 from dataclasses import dataclass
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
 from .cauchy import StructuredGRS
 from .field import FERMAT_Q, Field, fermat_add, fermat_mul
+from .matrices import StructuredPoints, gauss_inverse
 from .shardmap_exec import (
     DFTTables,
-    DrawLooseTables,
     UniversalTables,
     _group_perm,
     _ppermute,
+    _v_m_matrix,
     build_dft_tables,
     build_universal_tables,
     mesh_dft,
     mesh_universal_a2a,
-    _v_m_matrix,
 )
-from .matrices import StructuredPoints, gauss_inverse
 
 
 @dataclass(frozen=True)

@@ -28,10 +28,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .field import FERMAT_Q, fermat_add, fermat_mul, fermat_sub
+from ..kernels.ref import gf_matmul_ref
+from .field import fermat_add, fermat_mul, fermat_sub
 from .matrices import StructuredPoints, gauss_inverse, vandermonde
 from .prepare_shoot import phase_split
-from ..kernels.ref import gf_matmul_ref
 
 # jax < 0.5 ships shard_map under jax.experimental; newer jax at top level
 shard_map = getattr(jax, "shard_map", None)

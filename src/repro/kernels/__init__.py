@@ -1,9 +1,9 @@
+from . import ops
 from .gf_matmul import gf_matmul
 from .gf_solve import gf_gauss_inverse, gf_solve
 from .ntt import ntt, ntt_auto, ntt_xla
 from .ntt_encode import NTTEncodeParams, ntt_encode
 from .ref import gf_matmul_ref
-from . import ops
 
 __all__ = ["gf_matmul", "gf_gauss_inverse", "gf_solve", "gf_matmul_ref",
            "ntt", "ntt_auto", "ntt_xla", "NTTEncodeParams", "ntt_encode",

@@ -3,7 +3,7 @@ from __future__ import annotations
 
 import jax.numpy as jnp
 
-from repro.core.field import FERMAT_Q, fermat_add, fermat_mul, fermat_reduce
+from repro.core.field import fermat_add, fermat_mul, fermat_reduce
 
 
 def gf_matmul_ref(a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:

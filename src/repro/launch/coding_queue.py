@@ -15,6 +15,11 @@ same chunk callables and the double-buffered stream pipeline
     y = fut.result()
     q.close()
 
+This is the engine behind `repro.api.CodedSystem.submit` — a session lazily
+opens one queue on its backend and routes `submit("encode"|"decode", ...)`
+futures through it (erasure patterns pinned at submit time); direct
+`CodingQueue` use remains supported for callers batching across specs.
+
 Single worker thread; batching is opportunistic (whatever accumulated
 since the last drain, bounded by `max_batch_w` payload columns per group).
 Correctness is backend-bitwise: results equal per-request `plan.run`.
@@ -32,10 +37,11 @@ import numpy as np
 
 @dataclass
 class _Request:
-    key: tuple                 # plan-cache group key
+    key: tuple                 # plan-cache group key (includes the A digest)
     op: str                    # "encode" | "decode"
     spec: Any
     erased: tuple | None
+    A: Any                     # explicit generator block (or None)
     payload: np.ndarray
     future: Future
 
@@ -71,17 +77,26 @@ class CodingQueue:
         self._worker.start()
 
     # -- client side --------------------------------------------------------
-    def submit_encode(self, spec, x) -> Future:
-        """Encode payload x (K,)/(K, W) under `spec`; Future of sinks."""
-        return self._submit(_Request(("enc", spec, self.backend), "encode",
-                                     spec, None, np.asarray(x), Future()))
+    def submit_encode(self, spec, x, A=None) -> Future:
+        """Encode payload x (K,)/(K, W) under `spec`; Future of sinks.
+        `A` is the explicit generator block for kind="universal"/"lagrange"
+        specs that carry one (same contract as `Encoder.plan`); its digest
+        is part of the group key, so same-spec requests with different
+        matrices never coalesce into one plan."""
+        from ..api.planner import _digest
 
-    def submit_decode(self, spec, erased, v) -> Future:
+        return self._submit(_Request(
+            ("enc", spec, self.backend, _digest(A)), "encode",
+            spec, None, A, np.asarray(x), Future()))
+
+    def submit_decode(self, spec, erased, v, A=None) -> Future:
         """Repair `erased` from survivor symbols v; Future of symbols."""
+        from ..api.planner import _digest
+
         erased = tuple(sorted({int(e) for e in erased}))
-        return self._submit(_Request(("dec", spec, erased, self.backend),
-                                     "decode", spec, erased,
-                                     np.asarray(v), Future()))
+        return self._submit(_Request(
+            ("dec", spec, erased, self.backend, _digest(A)), "decode",
+            spec, erased, A, np.asarray(v), Future()))
 
     def _submit(self, req: _Request) -> Future:
         if self._closing or self._worker is None:
@@ -141,10 +156,10 @@ class CodingQueue:
         try:
             r0 = reqs[0]
             if r0.op == "encode":
-                plan = Encoder.plan(r0.spec, backend=self.backend)
+                plan = Encoder.plan(r0.spec, backend=self.backend, A=r0.A)
             else:
                 plan = Decoder.plan(r0.spec, erased=r0.erased,
-                                    backend=self.backend)
+                                    backend=self.backend, A=r0.A)
             # bound the coalesced width per run_batched call
             chunk: list[_Request] = []
             w = 0

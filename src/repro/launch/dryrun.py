@@ -28,7 +28,6 @@ from pathlib import Path
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from ..configs import ARCH_IDS, cell_applicable, get_config, get_shape

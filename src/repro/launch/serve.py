@@ -4,20 +4,21 @@ Demonstrates the full request path (tokenize-stub -> prefill -> KV-cached
 decode); on TPU the same decode_step lowers under the production mesh (the
 decode_32k / long_500k dry-run cells).
 
-`--coded-selfcheck` additionally runs the replica's parameters through the
-unified encoding API before serving: shard, RS-parity-encode
-(`Encoder.plan(..., backend="local")`), drop R shards, reconstruct, and
-verify bitwise — the integrity gate a coded parameter store performs on
-startup.  With `--degraded` the recovery leg runs through the decode
-subsystem (`repro.recover.Decoder`) instead of the host-side solve: the
-same cached `DecodePlan` a degraded read would execute, exercising the
-repair matrix + Pallas kernel path end to end.
+`--coded-selfcheck` additionally runs the replica's parameters through a
+`repro.api.CodedSystem` session before serving: shard, RS-parity-encode
+(`system.codeword` on the local kernel backend), drop R shards
+(`system.fail`), reconstruct (`system.read`), and verify bitwise — the
+integrity gate a coded parameter store performs on startup.  With
+`--degraded` the recovery leg runs through the session's auto-replanned
+decode path instead of the host-side solve: the same cached `DecodePlan` a
+degraded read would execute, exercising the repair matrix + Pallas kernel
+path end to end.
 
-`--queue-demo N` drives the batched coding queue
-(`launch.coding_queue.CodingQueue`): N concurrent encode and degraded-read
-decode requests are submitted from worker threads, coalesced into streamed
-`run_batched` plan executions, and every result is verified bitwise
-against a direct per-request `plan.run`."""
+`--queue-demo N` drives the batched coding queue through `system.submit`:
+N concurrent encode and degraded-read decode requests are submitted from
+worker threads, coalesced into streamed `run_batched` plan executions
+(`launch.coding_queue.CodingQueue` underneath), and every result is
+verified bitwise against a direct per-request `plan.run`."""
 from __future__ import annotations
 
 import argparse
@@ -29,28 +30,26 @@ def _queue_demo(n_requests: int, n_shards: int, n_parity: int) -> None:
 
     import numpy as np
 
-    from ..api import CodeSpec, Encoder
+    from ..api import CodedSystem, CodeSpec
     from ..core.field import FERMAT
-    from ..recover import Decoder
-    from .coding_queue import CodingQueue
 
-    spec = CodeSpec(kind="rs", K=n_shards, R=n_parity)
-    rng = np.random.default_rng(0)
-    enc_plan = Encoder.plan(spec, backend="local")
-    erased = tuple(range(n_parity))  # worst case: first R data shards lost
-    dec_plan = Decoder.plan(spec, erased=erased, backend="local")
+    # one session handle: erasure state + both planners + the coalescing
+    # queue behind system.submit (previously hand-wired plans + CodingQueue)
+    system = CodedSystem(CodeSpec(kind="rs", K=n_shards, R=n_parity),
+                         backend="local")
+    system.fail(range(n_parity))  # worst case: first R data shards lost
+    enc_plan, dec_plan = system.encode_plan, system.decode_plan
 
-    q = CodingQueue(backend="local")
     futs: list[tuple[str, np.ndarray, object]] = []
     lock = threading.Lock()
 
     def client(seed: int) -> None:
         r = np.random.default_rng(seed)
         x = FERMAT.rand((n_shards, int(r.integers(64, 512))), r)
-        fe = q.submit_encode(spec, x)
-        full = np.concatenate([x % FERMAT.q, enc_plan.run(x)])
-        v = full[list(dec_plan.kept)]
-        fd = q.submit_decode(spec, erased, v)
+        fe = system.submit("encode", x)
+        full = system.codeword(x)
+        v = full[list(system.kept)]
+        fd = system.submit("decode", v)
         with lock:
             futs.append(("encode", x, fe))
             futs.append(("decode", v, fd))
@@ -65,8 +64,9 @@ def _queue_demo(n_requests: int, n_shards: int, n_parity: int) -> None:
         got = fut.result(timeout=120)
         ref = (enc_plan if op == "encode" else dec_plan).run(payload)
         assert np.array_equal(got, ref), f"queued {op} != direct run"
-    q.close()
-    s = q.stats
+    stats = system.stats()
+    system.close()
+    s = stats["queue"]
     print(f"coding queue OK: {s.requests} requests in {s.batches} batched "
           f"plan executions (max coalesced {s.max_coalesced}); "
           f"encode path: {enc_plan.local_impl}")
@@ -76,7 +76,7 @@ def _coded_selfcheck(params, n_shards: int, n_parity: int,
                      degraded: bool = False) -> None:
     import numpy as np
 
-    from ..api import CodeSpec, Encoder
+    from ..api import CodedSystem, CodeSpec
     from ..ckpt.checkpoint import tree_to_bytes
     from ..core.field import FERMAT, bytes_to_symbols
 
@@ -91,29 +91,26 @@ def _coded_selfcheck(params, n_shards: int, n_parity: int,
         [sym, np.zeros(n_shards * L - sym.size, np.int64)]
     ).reshape(n_shards, L)
 
-    spec = CodeSpec(kind="rs", K=n_shards, R=n_parity)
-    plan = Encoder.plan(spec, backend="local")
-    parity = plan.run(shards)
-    print(plan.describe())
+    system = CodedSystem(CodeSpec(kind="rs", K=n_shards, R=n_parity),
+                         backend="local")
+    full = system.codeword(shards)  # [shards | parity]
 
     # worst case: the first R data shards are lost; recover from parity
-    full = np.concatenate([shards, parity])
     erased = tuple(range(n_parity))
     if degraded:
-        from ..recover import Decoder
-
-        dplan = Decoder.plan(spec, erased=erased, backend="local")
-        print(dplan.describe())
-        v = full[list(dplan.kept)]
-        repaired = dplan.run(v)
+        system.fail(erased)
+        print(system.describe())
+        repaired = system.decode(full)
         assert np.array_equal(repaired, shards[: n_parity]), \
             "degraded self-check failed (repair)"
-        rec = dplan.data(v)
+        rec = system.read(full)
+        system.heal()
     else:
         from ..core.parity import reconstruct
 
+        print(system.describe())
         kept = np.arange(n_parity, n_shards + n_parity)
-        rec = reconstruct(FERMAT, plan.sgrs, kept, full[kept])
+        rec = reconstruct(FERMAT, system.encode_plan.sgrs, kept, full[kept])
     assert np.array_equal(rec, shards), "coded self-check failed"
     mode = "degraded DecodePlan" if degraded else "host solve"
     print(f"coded self-check OK ({mode}): {n_shards} param shards + "

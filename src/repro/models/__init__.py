@@ -1,4 +1,4 @@
+from . import layers, model, ssm
 from .config import SHAPES, ArchConfig, ShapeConfig
-from . import model, layers, ssm
 
 __all__ = ["SHAPES", "ArchConfig", "ShapeConfig", "model", "layers", "ssm"]

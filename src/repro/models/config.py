@@ -1,7 +1,7 @@
 """Architecture configuration — one dataclass covers all 10 assigned archs."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

@@ -18,8 +18,6 @@ Families:
 from __future__ import annotations
 
 import math
-from functools import partial
-from typing import Any
 
 import jax
 import jax.numpy as jnp
@@ -30,7 +28,6 @@ from .layers import (
     Params,
     _dtype,
     attention,
-    causal_mask,
     dense_init,
     init_attention,
     init_mlp,

@@ -1,8 +1,10 @@
-"""The three interchangeable executors behind `DecodePlan.run`.
+"""The decode halves of the three built-in backends (the `Backend`
+objects binding these to the registry live in `api.backends`).
 
     simulator — all-to-all decode among the K kept survivors on the
                 round network, with the erased processors fail()-ed
-                (exact numpy oracle; measured C1/C2 on `plan.sim_net`)
+                (exact numpy oracle; measured C1/C2 recorded
+                thread-locally on `plan.last_stats` / `plan.sim_net`)
     mesh      — devices-as-survivors shard_map execution: device i holds
                 the symbol of survivor `plan.kept[i]`; each batch of
                 repair columns runs the same universal mesh A2A as the
@@ -23,17 +25,16 @@ from ..core.simulator import RoundNetwork
 from .engine import decentralized_decode
 
 
-def run_simulator(plan, v: np.ndarray) -> np.ndarray:
+def run_simulator(plan, v: np.ndarray) -> tuple[np.ndarray, RoundNetwork]:
     """Decode on the paper's p-port round network: the erased processors
-    are failed (any schedule touching them would raise), and the network
-    (with measured C1/C2) is kept on `plan.sim_net`."""
+    are failed (any schedule touching them would raise); returns the
+    repaired symbols and the network with its measured C1/C2."""
     spec, f = plan.spec, plan.field
     net = RoundNetwork(spec.N, spec.p)
     net.fail(plan.erased)
     y, net = decentralized_decode(f, plan.tables.D, f.arr(v),
                                   list(plan.kept), spec.p, net)
-    plan.sim_net = net
-    return np.asarray(y, np.int64)
+    return np.asarray(y, np.int64), net
 
 
 def local_decode_callable(plan):
@@ -115,7 +116,3 @@ def run_mesh(plan, v: np.ndarray) -> np.ndarray:
         y = np.asarray(fn(vg), np.int64)
         out.append(y[:eb])
     return np.concatenate(out, axis=0)
-
-
-DRUNNERS = {"simulator": run_simulator, "local": run_local, "mesh": run_mesh}
-DBACKENDS = tuple(DRUNNERS)

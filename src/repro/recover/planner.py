@@ -27,6 +27,7 @@ shard_map executables.  Three backends return bitwise-identical symbols:
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict
 from dataclasses import dataclass, field as dc_field
 from typing import Any
@@ -34,11 +35,11 @@ from typing import Any
 import numpy as np
 
 from ..api.planner import ALPHA_DEFAULT, BETA_BITS_DEFAULT, _digest, _host_tables
+from ..api.registry import PlanStats, get_backend
 from ..api.spec import CodeSpec
 from ..core.cost_model import LinearCost
 from ..core.field import FERMAT_Q, Field
 from ..core.matrices import gauss_inverse
-from .backends import DBACKENDS, DRUNNERS
 from .engine import batch_block, decode_batches, decode_cost
 
 
@@ -159,22 +160,25 @@ def _decode_tables(spec: CodeSpec, erased: tuple[int, ...],
 # ---------------------------------------------------------------------------
 
 @dataclass
-class DecodePlan:
+class DecodePlan(PlanStats):
     """An executable erasure decode: spec + erasure pattern + backend +
     cached host tables.  Obtained from `Decoder.plan`; cached — hold on to
     it and call `.run` per payload.
+
+    Per-run measurements (`last_stats`, `sim_net`, `stream_stats`) are
+    thread-local (see `api.registry.PlanStats`): plans are shared across
+    threads and each thread reads only its own last run.
     """
+
+    op = "decode"  # stream/backend dispatch discriminator (not a field)
 
     spec: CodeSpec
     backend: str
     tables: DecodeTables
-    # RoundNetwork of the LAST simulator run (same sharing caveat as
-    # EncodePlan.sim_net: read it right after your own .run()).
-    sim_net: Any = None
-    # StreamStats of the LAST run_stream on this plan (same sharing caveat).
-    stream_stats: Any = None
     _mesh_fns: list | None = None
     _local_fn: Any = None
+    # thread-local per-run stats storage (PlanStats reads/writes this)
+    _tls: Any = dc_field(default_factory=threading.local, repr=False)
 
     @property
     def field(self) -> Field:
@@ -218,7 +222,7 @@ class DecodePlan:
         if not self.erased:
             y = np.zeros((0, v.shape[1]), np.int64)
         else:
-            y = DRUNNERS[self.backend](self, v)
+            y = get_backend(self.backend).decode(self, v)
         return y[:, 0] if squeeze else y
 
     def run_stream(self, payload, *, chunk_w: int | None = None):
@@ -246,10 +250,10 @@ class DecodePlan:
         return stream.run_batched(self, vs, chunk_w=chunk_w)
 
     # -- streaming adapter (see api/stream.py) ------------------------------
-    def _stream_sim_chunk(self, v: np.ndarray) -> np.ndarray:
+    def _stream_sim_chunk(self, v: np.ndarray):
         from .backends import run_simulator
 
-        return run_simulator(self, v)
+        return run_simulator(self, v)  # (y, RoundNetwork) pair
 
     def _stream_device_fn(self):
         import jax
@@ -337,17 +341,13 @@ class Decoder:
         erased : iterable of codeword positions in [0, K + R); data symbol
                  k is position k, parity symbol r is position K + r.
                  At most R positions may be erased.
-        backend: "simulator" | "mesh" | "local"
+        backend: a registered backend name ("simulator" | "mesh" | "local"
+                 built in; see `api.register_backend`), capability-checked
+                 here at plan time
         A      : explicit generator block for kind="universal"/"lagrange"
                  specs — must match the block the data was encoded with.
         """
-        if backend not in DBACKENDS:
-            raise ValueError(
-                f"unknown backend {backend!r}; expected one of {DBACKENDS}")
-        if backend in ("local", "mesh") and spec.q != FERMAT_Q:
-            raise ValueError(
-                f"backend {backend!r} runs the uint32 Fermat kernels "
-                f"(q={FERMAT_Q} only); use backend='simulator' for q={spec.q}")
+        get_backend(backend).validate(spec, op="decode")
         erased = tuple(sorted({int(e) for e in erased}))
         if erased and not (0 <= erased[0] and erased[-1] < spec.N):
             raise ValueError(
@@ -373,7 +373,15 @@ class Decoder:
 
     @classmethod
     def cache_clear(cls) -> None:
-        _DPLANS.clear()
-        _DTABLES.clear()
-        for k in _DSTATS:
-            _DSTATS[k] = 0
+        """Drop the decode-side caches (plans + decode tables).  Safe on
+        its own — decode tables reference encode host tables, not the
+        other way round; for a full coordinated clear of both stacks use
+        `repro.api.cache_clear()` / `Encoder.cache_clear()`."""
+        _clear_decoder_state()
+
+
+def _clear_decoder_state() -> None:
+    _DPLANS.clear()
+    _DTABLES.clear()
+    for k in _DSTATS:
+        _DSTATS[k] = 0

@@ -1,6 +1,6 @@
-from .state import TrainState, init_state, abstract_state, make_train_setup
-from .train_loop import make_train_step, make_eval_step
 from . import serve
+from .state import TrainState, abstract_state, init_state, make_train_setup
+from .train_loop import make_eval_step, make_train_step
 
 __all__ = ["TrainState", "init_state", "abstract_state", "make_train_setup",
            "make_train_step", "make_eval_step", "serve"]

@@ -2,7 +2,6 @@
 cache) and decode (one token per request against the cache)."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
 from ..models import model as M

@@ -9,9 +9,6 @@ XLA's latency-hiding scheduler (enabled via flags in launch/train.py).
 """
 from __future__ import annotations
 
-from functools import partial
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 

@@ -19,7 +19,7 @@ import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.field import FERMAT
-from repro.core.matrices import StructuredPoints, permuted_dft_matrix, vandermonde
+from repro.core.matrices import permuted_dft_matrix
 from repro.core.parity import build_parity_tables, mesh_parity_encode, reconstruct
 from repro.core.shardmap_exec import (
     build_dft_tables,

@@ -1,14 +1,12 @@
 """Roofline infrastructure: HLO census parser, cost model, dry-run helpers."""
 import jax
 import jax.numpy as jnp
-import numpy as np
-import pytest
 
 from repro.core.cost_model import (
     framework, gather_encode_scatter, lower_bound_c1, lower_bound_c2,
     multireduce_jeong, universal,
 )
-from repro.launch.hlo_cost import analyze, parse_hlo
+from repro.launch.hlo_cost import analyze
 
 
 def test_hlo_census_scales_while_loops():

@@ -1,0 +1,83 @@
+"""The perf-regression gate (`benchmarks/run.py --check`): baseline
+matching, tolerances, bounds, and — crucially — that renamed or dropped
+benchmarks cannot silently stop being gated (baseline entry with no
+measured row fails; measured row with no baseline entry warns)."""
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(REPO))
+
+from benchmarks.run import _check_baseline, _params_from  # noqa: E402
+
+
+def _entry(us, **kw):
+    return {"us_per_call": us, "params": kw.pop("params", {}), **kw}
+
+
+def test_clean_pass_and_relative_tolerance():
+    base = {"stream/a_K16": _entry(100.0)}
+    acc = {"stream/a_K16": _entry(110.0)}
+    problems, warnings = _check_baseline(acc, base, 0.25, None)
+    assert problems == [] and warnings == []
+
+    acc = {"stream/a_K16": _entry(200.0)}  # 2x: above 1 + 0.25
+    problems, _ = _check_baseline(acc, base, 0.25, None)
+    assert len(problems) == 1 and "regressed" in problems[0]
+
+    # per-entry tolerance overrides the CLI default
+    base = {"stream/a_K16": _entry(100.0, tolerance=1.5)}
+    problems, _ = _check_baseline(acc, base, 0.25, None)
+    assert problems == []
+
+
+def test_baseline_entry_without_measured_row_fails():
+    """A renamed/dropped benchmark must fail the gate, not vanish from it."""
+    base = {"stream/old_name_K16": _entry(100.0)}
+    problems, _ = _check_baseline({}, base, 0.25, None)
+    assert len(problems) == 1
+    assert "in baseline but not measured" in problems[0]
+
+
+def test_measured_row_without_baseline_entry_warns():
+    """The rename's other half: the NEW row name is running ungated."""
+    base = {"stream/old_K16": _entry(100.0)}
+    acc = {"stream/old_K16": _entry(100.0),
+           "stream/new_K16": _entry(5.0),
+           "table1/unrelated": _entry(1.0)}  # un-gated section: no warning
+    problems, warnings = _check_baseline(acc, base, 0.25, None)
+    assert problems == []
+    assert len(warnings) == 1 and "stream/new_K16" in warnings[0]
+    assert "NOT gated" in warnings[0]
+
+
+def test_sections_filter_skips_unran_baseline_entries():
+    base = {"stream/a_K16": _entry(100.0), "recover/b_K16": _entry(50.0)}
+    acc = {"stream/a_K16": _entry(100.0)}
+    problems, _ = _check_baseline(acc, base, 0.25, {"stream"})
+    assert problems == []  # recover wasn't run: its absence is fine
+    problems, _ = _check_baseline(acc, base, 0.25, {"stream", "recover"})
+    assert len(problems) == 1 and problems[0].startswith("recover/b_K16")
+
+
+def test_shape_param_drift_fails():
+    base = {"stream/a_K16": _entry(100.0, params={"K": 16})}
+    acc = {"stream/a_K16": _entry(100.0, params={"K": 32})}
+    problems, _ = _check_baseline(acc, base, 0.25, None)
+    assert len(problems) == 1 and "shape params drifted" in problems[0]
+
+
+def test_absolute_bounds_and_better_higher():
+    base = {"stream/ntt_speedup_K128": {"min": 1.5},
+            "stream/tput": _entry(100.0, better="higher")}
+    acc = {"stream/ntt_speedup_K128": _entry(1.2),
+           "stream/tput": _entry(60.0)}  # 40% below with tol 0.25
+    problems, _ = _check_baseline(acc, base, 0.25, None)
+    assert len(problems) == 2
+    assert any("below required min" in p for p in problems)
+    assert any("regressed below" in p for p in problems)
+
+
+def test_params_parsed_from_row_names():
+    assert _params_from("stream/enc_K16_R4_W4096", "backend=local;x=1") == {
+        "K": 16, "R": 4, "W": 4096, "backend": "local"}

@@ -1,7 +1,7 @@
 """Pallas gf_matmul kernel: shape sweep + adversarial values vs oracles."""
+import jax.numpy as jnp
 import numpy as np
 import pytest
-import jax.numpy as jnp
 from conftest_hypothesis import given, settings, st
 
 from repro.core.field import FERMAT, FERMAT_Q

@@ -1,0 +1,405 @@
+"""CodedSystem session API + the Backend protocol/registry.
+
+Covers the registry lifecycle (register a dummy backend, plan and execute
+through it end-to-end, capability errors for unsupported (spec, backend)
+pairs), the fail -> degraded-read -> heal -> encode round-trip on the
+in-process backends for all four code kinds (the mesh leg runs in
+`system_mesh_checks.py` on 8 forced host devices), the thread-safety of
+the per-run stats, and the coordinated cache clear."""
+import os
+import subprocess
+import sys
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Backend,
+    BackendCapabilityError,
+    CodedSystem,
+    CodeSpec,
+    Encoder,
+    LinkModel,
+    available_backends,
+    cache_clear,
+    cache_info,
+    register_backend,
+    unregister_backend,
+)
+from repro.core.field import FERMAT
+from repro.recover import Decoder
+
+REPO = Path(__file__).resolve().parent.parent
+RNG = np.random.default_rng(23)
+
+# (kind, K, R, erasure pattern) — patterns mix data and parity positions;
+# the dft pattern is one of the decodable ones (the transform is not MDS)
+CASES = [
+    ("universal", 8, 4, (0, 9)),
+    ("rs", 8, 4, (2, 4, 11)),
+    ("lagrange", 8, 4, (1, 10)),
+    ("dft", 8, 8, (5, 9, 13)),
+]
+
+
+def _spec(kind, K, R, **kw):
+    if kind == "universal":
+        kw.setdefault("seed", 5)
+    return CodeSpec(kind=kind, K=K, R=R, **kw)
+
+
+# ---------------------------------------------------------------------------
+# fail -> degraded read -> heal -> encode round-trip
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,K,R,erased", CASES)
+def test_round_trip_bitwise_across_backends(kind, K, R, erased):
+    spec = _spec(kind, K, R)
+    x = FERMAT.rand((K, 5), RNG)
+    outs = {}
+    for backend in ("simulator", "local"):
+        system = CodedSystem(spec, backend=backend)
+        cw = system.codeword(x)
+        system.fail(erased)
+        assert system.failed == tuple(sorted(erased))
+        lost = system.decode(cw)                  # recompute erased symbols
+        data = system.read(cw)                    # full degraded read
+        assert np.array_equal(lost, cw[list(sorted(erased))]), backend
+        assert np.array_equal(data, x % FERMAT.q), backend
+        system.heal()
+        assert system.failed == () and system.kept == tuple(range(K))
+        assert np.array_equal(system.encode(x), cw[K:]), backend
+        outs[backend] = (cw, lost, data)
+    a, b = outs["simulator"], outs["local"]
+    for ya, yb in zip(a, b):
+        assert np.array_equal(ya, yb)
+
+
+def test_read_accepts_codeword_or_survivor_rows():
+    spec = _spec("rs", 8, 4)
+    system = CodedSystem(spec, backend="simulator").fail((0, 1))
+    x = FERMAT.rand((8, 3), RNG)
+    cw = system.codeword(x)
+    v = cw[list(system.kept)]
+    assert np.array_equal(system.read(cw), system.read(v))
+    assert np.array_equal(system.decode(cw), system.decode(v))
+    with pytest.raises(ValueError):
+        system.read(cw[:5])  # neither N nor K rows
+
+
+def test_fail_heal_state_machine():
+    system = CodedSystem(_spec("rs", 8, 4), backend="simulator")
+    system.fail(2).fail((3, 9))
+    assert system.failed == (2, 3, 9)
+    with pytest.raises(ValueError):
+        system.fail((4, 5))  # 5 failures > R=4
+    with pytest.raises(ValueError):
+        system.fail(12)      # outside [0, N)
+    with pytest.raises(ValueError):
+        system.heal(12)      # heal validates the same range as fail
+    system.heal(3)
+    assert system.failed == (2, 9)
+    system.heal()
+    assert system.failed == ()
+    # incremental failures replan the decode side automatically
+    system.fail(0)
+    assert system.decode_plan.erased == (0,)
+    system.fail(1)
+    assert system.decode_plan.erased == (0, 1)
+
+
+def test_healthy_read_and_empty_decode():
+    system = CodedSystem(_spec("rs", 8, 4), backend="simulator")
+    x = FERMAT.rand((8, 2), RNG)
+    cw = system.codeword(x)
+    assert np.array_equal(system.read(cw), x % FERMAT.q)
+    assert system.decode(cw).shape == (0, 2)
+
+
+def test_streams_and_batched_through_system():
+    spec = _spec("rs", 8, 4, W=64)
+    system = CodedSystem(spec, backend="local", chunk_w=128)
+    x = FERMAT.rand((8, 300), RNG)
+    cw = system.codeword(x)
+    got = np.concatenate(list(system.encode_stream(x)), axis=1)
+    assert np.array_equal(got, cw[8:])
+    outs = system.encode_batched([x[:, :10], x[:, 10:]])
+    assert np.array_equal(np.concatenate(outs, axis=1), cw[8:])
+    system.fail((2, 11))
+    rep = np.concatenate(list(system.decode_stream(cw)), axis=1)
+    assert np.array_equal(rep, system.decode(cw))
+    # chunked decode stream accepts (N, w) codeword chunks too
+    rep2 = np.concatenate(
+        list(system.decode_stream(cw[:, i : i + 77] for i in range(0, 300, 77))),
+        axis=1)
+    assert np.array_equal(rep2, rep)
+
+
+def test_submit_futures_roundtrip():
+    spec = _spec("rs", 8, 4)
+    with CodedSystem(spec, backend="local") as system:
+        x = FERMAT.rand((8, 17), RNG)
+        cw = system.codeword(x)
+        system.fail((0, 9))
+        fe = system.submit("encode", x)
+        fd = system.submit("decode", cw)
+        assert np.array_equal(fe.result(timeout=60), cw[8:])
+        assert np.array_equal(fd.result(timeout=60), system.decode(cw))
+        with pytest.raises(ValueError):
+            system.submit("transmogrify", x)
+        stats = system.stats()
+        assert stats["queue"].requests == 2
+    # context exit drained the queue; a later submit opens a fresh one
+    fut = system.submit("encode", x)
+    assert np.array_equal(fut.result(timeout=60), cw[8:])
+    system.close()
+
+
+def test_submit_preserves_explicit_matrix():
+    """The queue must plan with the session's explicit generator block —
+    and same-spec requests carrying different matrices must not coalesce
+    into one plan (the A digest is part of the group key)."""
+    spec = CodeSpec(kind="universal", K=8, R=4)
+    A1, A2 = FERMAT.rand((8, 4), RNG), FERMAT.rand((8, 4), RNG)
+    x = FERMAT.rand((8, 9), RNG)
+    s2 = CodedSystem(spec, backend="local", A=A2)
+    with CodedSystem(spec, backend="local", A=A1) as s1:
+        f1 = s1.submit("encode", x)
+        assert np.array_equal(f1.result(timeout=60), s1.encode(x))
+        cw = s1.codeword(x)
+        s1.fail((0, 9))
+        fd = s1.submit("decode", cw)
+        assert np.array_equal(fd.result(timeout=60), s1.decode(cw))
+    # ONE queue, two matrices over the same spec: per-A group keys keep
+    # them on their own plans
+    from repro.launch.coding_queue import CodingQueue
+
+    q = CodingQueue(backend="local")
+    fa, fb = q.submit_encode(spec, x, A=A1), q.submit_encode(spec, x, A=A2)
+    ra, rb = fa.result(timeout=60), fb.result(timeout=60)
+    q.close()
+    assert np.array_equal(ra, s1.heal().encode(x))
+    assert np.array_equal(rb, s2.encode(x))
+    assert not np.array_equal(ra, rb)
+    s2.close()
+
+
+def test_lagrange_system_submit_uses_session_matrix():
+    """Arbitrary interpolation points only exist on the session's A —
+    queued submission must not replan from the bare spec (which would
+    build the structured code or fail its K | R assertion)."""
+    from repro.coding import LagrangeComputer
+
+    lcc = LagrangeComputer.build(FERMAT, K=5, N=16)
+    x = FERMAT.rand((5, 4), RNG)
+    system = lcc.system()
+    try:
+        fut = system.submit("encode", x)
+        assert np.array_equal(fut.result(timeout=60), lcc.encode(x))
+    finally:
+        system.close()
+
+
+def test_stats_and_describe():
+    system = CodedSystem(_spec("rs", 8, 4), backend="simulator",
+                         link=LinkModel())
+    x = FERMAT.rand((8, 2), RNG)
+    cw = system.codeword(x)
+    st = system.stats()
+    assert st["failed"] == () and "decode" not in st
+    assert st["encode"]["last"].C1 > 0          # measured by the simulator
+    assert st["encode"]["model_us"] > 0
+    assert {"encode", "decode"} <= set(st["cache"])
+    system.fail((1, 8))
+    system.read(cw)
+    st = system.stats()
+    assert st["decode"]["erased"] == (1, 8)
+    text = system.describe()
+    assert "CodedSystem[rs]" in text and "failed  : [1, 8]" in text
+    assert "DecodePlan" in text and "EncodePlan" in text
+
+
+# ---------------------------------------------------------------------------
+# Backend registry lifecycle
+# ---------------------------------------------------------------------------
+
+class _HostMatmulBackend(Backend):
+    """Dummy third-party executor: exact host matmuls, any modulus."""
+
+    def encode(self, plan, x):
+        return plan.field.matmul(plan.A.T, x)
+
+    def decode(self, plan, v):
+        return plan.field.matmul(plan.tables.D.T, v)
+
+
+def test_registered_dummy_backend_end_to_end():
+    register_backend("dummy-host", _HostMatmulBackend)
+    try:
+        assert "dummy-host" in available_backends()
+        spec = _spec("rs", 8, 4)
+        x = FERMAT.rand((8, 6), RNG)
+        system = CodedSystem(spec, backend="dummy-host")
+        ref = CodedSystem(spec, backend="simulator")
+        cw = system.codeword(x)
+        assert np.array_equal(cw, ref.codeword(x))
+        system.fail((2, 3))
+        ref.fail((2, 3))
+        assert np.array_equal(system.decode(cw), ref.decode(cw))
+        assert np.array_equal(system.read(cw), x % FERMAT.q)
+        # streaming falls back to bitwise per-chunk execution
+        got = np.concatenate(list(system.encode_stream(x, chunk_w=2)), axis=1)
+        assert np.array_equal(got, cw[8:])
+        # the planner layer sees it too
+        assert Encoder.plan(spec, backend="dummy-host").backend == "dummy-host"
+    finally:
+        unregister_backend("dummy-host")
+    assert "dummy-host" not in available_backends()
+    with pytest.raises(ValueError, match="unknown backend"):
+        Encoder.plan(_spec("rs", 8, 4), backend="dummy-host")
+
+
+def test_register_refuses_silent_shadowing():
+    with pytest.raises(ValueError, match="already registered"):
+        register_backend("simulator", _HostMatmulBackend)
+    register_backend("dummy-twice", _HostMatmulBackend)
+    try:
+        with pytest.raises(ValueError, match="already registered"):
+            register_backend("dummy-twice", _HostMatmulBackend)
+        register_backend("dummy-twice", _HostMatmulBackend, overwrite=True)
+    finally:
+        unregister_backend("dummy-twice")
+
+
+def test_capability_errors_at_plan_time():
+    # non-Fermat modulus on the uint32 kernel backends
+    spec7681 = CodeSpec(kind="rs", K=8, R=4, q=7681)
+    for backend in ("local", "mesh"):
+        with pytest.raises(BackendCapabilityError, match="Fermat"):
+            Encoder.plan(spec7681, backend=backend)
+        with pytest.raises(BackendCapabilityError):
+            Decoder.plan(spec7681, erased=(0,), backend=backend)
+        with pytest.raises(BackendCapabilityError):
+            CodedSystem(spec7681, backend=backend)
+    # mesh encode needs the R | K framework grid...
+    with pytest.raises(BackendCapabilityError, match=r"R \| K"):
+        Encoder.plan(CodeSpec(kind="universal", K=8, R=3, seed=1),
+                     backend="mesh")
+    # ...and one device per source (declared requirement, checked at plan
+    # time instead of erroring deep inside shard_map)
+    import jax
+
+    if len(jax.devices()) < 4096:
+        with pytest.raises(BackendCapabilityError, match="devices"):
+            Encoder.plan(CodeSpec(kind="rs", K=4096, R=512), backend="mesh")
+    # a backend that implements neither op refuses execution clearly
+    register_backend("dummy-inert", Backend)
+    try:
+        plan = Encoder.plan(_spec("rs", 8, 4), backend="dummy-inert")
+        with pytest.raises(BackendCapabilityError, match="encode"):
+            plan.run(FERMAT.rand((8, 2), RNG))
+    finally:
+        unregister_backend("dummy-inert")
+
+
+# ---------------------------------------------------------------------------
+# thread-safe per-run stats (the old plan.sim_net race)
+# ---------------------------------------------------------------------------
+
+def test_last_stats_thread_local_on_shared_plan():
+    spec = _spec("rs", 8, 4)
+    plan = Encoder.plan(spec, backend="simulator")
+    widths = {"a": 1, "b": 7}
+    expected = {}
+    for key, w in widths.items():
+        plan.run(FERMAT.rand((8, w), RNG))
+        expected[key] = (plan.last_stats.C1, plan.last_stats.C2)
+    assert expected["a"][1] != expected["b"][1]  # C2 scales with width
+
+    errors = []
+    barrier = threading.Barrier(2)
+
+    def worker(key):
+        w = widths[key]
+        try:
+            for _ in range(10):
+                barrier.wait(timeout=30)
+                plan.run(FERMAT.rand((8, w), RNG))
+                got = (plan.last_stats.C1, plan.last_stats.C2)
+                if got != expected[key]:
+                    errors.append((key, got, expected[key]))
+                assert plan.sim_net.C2 == expected[key][1]
+        except Exception as exc:  # noqa: BLE001 — surface in main thread
+            errors.append((key, repr(exc)))
+
+    threads = [threading.Thread(target=worker, args=(k,)) for k in widths]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+    assert not errors, errors[:4]
+
+
+def test_run_stats_carry_op_and_backend():
+    system = CodedSystem(_spec("rs", 8, 4), backend="simulator")
+    x = FERMAT.rand((8, 2), RNG)
+    cw = system.codeword(x)
+    assert system.encode_plan.last_stats.op == "encode"
+    system.fail((0,))
+    system.decode(cw)
+    assert system.decode_plan.last_stats.op == "decode"
+    assert system.decode_plan.last_stats.backend == "simulator"
+    # kernel backends measure nothing (and must not inherit stale stats)
+    local = CodedSystem(_spec("rs", 8, 4), backend="local")
+    local.encode(x)
+    assert local.encode_plan.last_stats is None
+
+
+# ---------------------------------------------------------------------------
+# coordinated cache clear
+# ---------------------------------------------------------------------------
+
+def test_cache_clear_clears_both_stacks():
+    cache_clear()
+    system = CodedSystem(_spec("rs", 8, 4), backend="simulator")
+    x = FERMAT.rand((8, 2), RNG)
+    cw = system.codeword(x)
+    system.fail((0, 1))
+    system.read(cw)
+    info = cache_info()
+    assert info["encode"]["plans"] >= 1 and info["decode"]["plans"] >= 1
+    # Encoder.cache_clear is the same coordinated entry point: no decode
+    # plan may survive holding references into dropped host tables
+    Encoder.cache_clear()
+    info = cache_info()
+    assert info["encode"]["plans"] == 0 and info["encode"]["tables"] == 0
+    assert info["decode"]["plans"] == 0 and info["decode"]["tables"] == 0
+    # Decoder-only clear remains decode-scoped (safe direction)
+    system2 = CodedSystem(_spec("rs", 8, 4), backend="simulator")
+    system2.fail((0,))
+    system2.read(system2.codeword(x))
+    Decoder.cache_clear()
+    info = cache_info()
+    assert info["decode"]["plans"] == 0
+    assert info["encode"]["plans"] >= 1
+
+
+# ---------------------------------------------------------------------------
+# mesh leg (8 forced host devices, subprocess)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_system_round_trip_mesh_subprocess():
+    """encode -> fail -> read -> heal bitwise across all three built-in
+    backends, mesh included, on 8 forced host devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "system_mesh_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "SYSTEM_MESH_CHECKS_OK" in proc.stdout
