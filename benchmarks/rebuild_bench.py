@@ -1,0 +1,68 @@
+"""Rebuild cost vs erasure count — re-materializing the full codeword.
+
+Rebuild = decode all currently-failed symbols among the survivors + heal;
+its cost scales with |E| (batches of repair columns), which is exactly the
+trade a decentralized store cares about: how much more expensive is losing
+8 shards than 1 before redundancy is restored?  Two families of rows:
+
+  rebuild/rebuild_local_*  — wall time of `CodedSystem.rebuild` (fail the
+                             pattern, recompute via the cached DecodePlan
+                             kernel path, heal) on the same (K, R, W) at
+                             growing |E|; derived carries the per-lost-
+                             symbol cost and the matching decode-only us
+  rebuild/rebuild_model_*  — the closed-form network cost of the rebuild's
+                             repair schedule (`recover.decode_cost`, exact
+                             C1/C2) at the same shapes
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.api import CodedSystem, CodeSpec
+from repro.core.field import FERMAT
+from repro.recover import Decoder, decode_cost
+
+
+def _time(fn, reps: int = 5) -> float:
+    fn()  # warm (compile / plan-cache fill)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        fn()
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def rows() -> list[str]:
+    rng = np.random.default_rng(29)
+    out = []
+    K, R, W = 32, 8, 4096
+    spec = CodeSpec(kind="rs", K=K, R=R, W=W)
+    x = FERMAT.rand((K, W), rng)
+    system = CodedSystem(spec, backend="local")
+    cw = system.codeword(x)
+    for n_erased in (1, 4, 8):
+        erased = tuple(range(0, 2 * n_erased, 2))  # data shards
+
+        def rebuild_once():
+            system.fail(erased)
+            healed = system.rebuild(cw)
+            return healed
+
+        dec = Decoder.plan(spec, erased=erased, backend="local")
+        v = cw[list(dec.kept)]
+        us_reb = _time(rebuild_once)
+        us_dec = _time(lambda: dec.run(v))
+        out.append(
+            f"rebuild/rebuild_local_K{K}_R{R}_E{n_erased}_W{W},{us_reb:.0f},"
+            f"backend=local;decode_us={us_dec:.0f};"
+            f"per_symbol_us={us_reb / n_erased:.0f}")
+
+        c = dec.cost()  # decode_cost with the spec's W folded into C2
+        model_us = c.total(Decoder.ALPHA, Decoder.BETA_BITS) * 1e6
+        raw = decode_cost(K, n_erased, spec.p)
+        out.append(
+            f"rebuild/rebuild_model_K{K}_R{R}_E{n_erased},{model_us:.1f},"
+            f"backend=model;C1={raw.C1};C2={raw.C2}")
+    system.close()
+    return out

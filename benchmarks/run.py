@@ -34,6 +34,8 @@ Sections:
   kernel/*       — Pallas gf_matmul micro-bench (interpret mode)
   recover/*      — decode vs encode: DecodePlan kernel hot path + closed-form
                    network costs (the repair half of the pipeline)
+  rebuild/*      — rebuild cost vs erasure count |E|: CodedSystem.rebuild
+                   wall time + closed-form repair-schedule cost
   stream/*       — streamed vs single-shot plan execution + NTT fast path
                    vs dense local encode (benchmarks/stream_bench.py)
   mesh_encode/*  — lowered-HLO collective bytes, universal vs RS (subprocess)
@@ -156,8 +158,8 @@ def main() -> None:
     args = ap.parse_args()
 
     from benchmarks import (framework_costs, kernel_bench,
-                            multireduce_compare, recover_bench, stream_bench,
-                            table1_costs)
+                            multireduce_compare, rebuild_bench, recover_bench,
+                            stream_bench, table1_costs)
 
     inproc = {
         "table1": table1_costs,
@@ -165,6 +167,7 @@ def main() -> None:
         "framework": framework_costs,
         "kernel": kernel_bench,
         "recover": recover_bench,
+        "rebuild": rebuild_bench,
         "stream": stream_bench,
     }
     subproc = {

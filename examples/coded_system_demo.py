@@ -6,9 +6,10 @@ serve traffic.
     x2 = system.read(cw)          # degraded read, auto-replanned
 
 Walks one `CodedSystem` through its lifecycle — healthy encode, failures,
-degraded reads (bitwise-exact), repair of exactly the lost symbols, heal,
-and batched future-based submission — and cross-checks the simulator
-oracle against the local kernel backend at every step.
+degraded reads (bitwise-exact), repair of exactly the lost symbols, full
+`rebuild` back to health, and batched future-based submission — and
+cross-checks the simulator oracle against the local kernel backend at
+every step.
 """
 import sys
 from pathlib import Path
@@ -47,7 +48,13 @@ if __name__ == "__main__":
     print(f"degraded: full read + {len(lost)}-symbol repair bitwise-exact; "
           f"decode model cost {oracle.stats()['decode']['model_us']:.1f} us")
 
-    system.heal()
+    healed = system.rebuild(cw)                  # re-materialize + heal()
+    assert np.array_equal(healed, cw)
+    assert np.array_equal(healed, oracle.rebuild(cw))
+    assert system.failed == () == oracle.failed
+    print("rebuilt : all lost symbols recomputed, codeword fully healed "
+          "(local == simulator bitwise)")
+
     fut = system.submit("encode", x)             # batched queue path
     assert np.array_equal(fut.result(timeout=60), cw[K:])
     system.close()

@@ -93,6 +93,48 @@ def iter_chunks(payload, K: int, chunk_w: int | None) -> Iterator[np.ndarray]:
             yield piece[:, c0 : c0 + cw]
 
 
+def split_chunks(payload, chunk_w: int) -> Iterator[np.ndarray]:
+    """Split a (rows, W) array or an iterable of (rows, w_i) pieces into
+    chunks of width <= `chunk_w`, preserving whatever leading dim the
+    pieces carry (the caller validates it — unlike `iter_chunks` this is
+    row-count-agnostic, for streams that carry full codeword rows).
+    Zero-width pieces yield nothing."""
+    pieces: Iterable = ((payload,) if hasattr(payload, "shape") else payload)
+    for piece in pieces:
+        piece = np.asarray(piece)
+        if piece.ndim != 2:
+            raise ValueError(
+                f"stream chunks must be 2-D (rows, w) arrays, got "
+                f"{piece.shape}")
+        for c0 in range(0, piece.shape[1], chunk_w):
+            yield piece[:, c0 : c0 + chunk_w]
+
+
+def run_paired_stream(plan, chunks: Iterator[np.ndarray], slice_fn: Callable,
+                      *, chunk_w: int) -> Iterator[tuple[np.ndarray, np.ndarray]]:
+    """Drive `plan.run_stream` over `slice_fn(chunk)` while pairing every
+    output block 1:1 with the chunk it came from — the passthrough side of
+    a rebuild rides along with the repaired rows, still through the
+    double-buffered device pipeline.
+
+    `chunks` must already be split to width <= `chunk_w` (use
+    `split_chunks` with the same value) so `run_stream` never re-splits a
+    piece and the pairing stays aligned; the pipeline's one-chunk
+    read-ahead means at most two chunks are held at once.
+    """
+    from collections import deque
+
+    pending: deque = deque()
+
+    def _feed():
+        for c in chunks:
+            pending.append(c)
+            yield slice_fn(c)
+
+    for y in plan.run_stream(_feed(), chunk_w=chunk_w):
+        yield pending.popleft(), y
+
+
 def _pipelined(chunks: Iterator[np.ndarray], to_device: Callable,
                dev_fn: Callable, finalize: Callable) -> Iterator[np.ndarray]:
     """Double-buffered device pipeline.

@@ -13,7 +13,7 @@ traffic" is three lines:
     cw = system.codeword(x)        # [x | parity] systematic codeword (N, W)
     system.fail([2, 17])           # processors 2 and 17 go dark
     x2 = system.read(cw)           # degraded read — auto-replanned decode
-    system.heal()                  # back to healthy encodes
+    cw = system.rebuild(cw)        # re-materialize lost symbols + heal()
 
 Underneath, `Encoder.plan` / `Decoder.plan` remain the public planner
 layer this composes: `system.encode_plan` and `system.decode_plan` expose
@@ -257,6 +257,122 @@ class CodedSystem:
 
         return plan.run_stream(_sliced(), chunk_w=chunk_w or self.chunk_w)
 
+    # -- rebuild: re-materialize the full codeword, then heal ---------------
+    def _complement_plan(self, plan):
+        """Decode plan for every position OUTSIDE `plan.kept` — the failed
+        positions plus the unkept survivors (exactly N - K = R targets).
+        A (K, W) kept-ordered payload has no rows for any of them, so a
+        rebuild from survivors-only input recomputes them all.  Always
+        decodable when `plan` itself was: the kept set is a basis."""
+        comp = tuple(i for i in range(self.spec.N)
+                     if i not in set(plan.kept))
+        from ..recover import Decoder
+
+        return Decoder.plan(self.spec, erased=comp, backend=self.backend,
+                            A=self._A)
+
+    def rebuild(self, v) -> np.ndarray:
+        """Recompute ALL currently-failed symbols from the survivors,
+        `heal()` the session, and return the fully healed (N,)/(N, W)
+        codeword — the decentralized re-materialization step that restores
+        full redundancy after failures (decode-as-encode among survivors;
+        bitwise-identical across backends).
+
+        `v` is the full (N, ...) codeword (rows at failed positions
+        ignored) or the (K, ...) survivor symbols ordered like
+        `system.kept` — with K rows the unkept survivor rows are
+        recomputed too (complement-pattern decode).  Only the pattern
+        pinned at entry is healed: a concurrent `fail` landing mid-rebuild
+        stays failed."""
+        plan = self.decode_plan  # pin ONE pattern for slice + run + heal
+        v = np.asarray(v)
+        squeeze = v.ndim == 1
+        healed = self._rebuild_block(v[:, None] if squeeze else v, plan)
+        self.heal(plan.erased)
+        return healed[:, 0] if squeeze else healed
+
+    def _rebuild_block(self, v: np.ndarray, plan) -> np.ndarray:
+        """One (N, w) healed block from an (N, w)/(K, w) survivor block
+        (the non-streamed body of `rebuild`; pattern pinned by `plan`)."""
+        N, K, q = self.spec.N, self.spec.K, self.spec.q
+        if v.shape[0] == N:
+            healed = (v % q).astype(np.int64)
+            if plan.erased:
+                healed[list(plan.erased)] = plan.run(v[list(plan.kept)])
+            return healed
+        if v.shape[0] == K:
+            comp = self._complement_plan(plan)
+            healed = np.empty((N, v.shape[1]), np.int64)
+            healed[list(comp.kept)] = (v % q).astype(np.int64)
+            healed[list(comp.erased)] = comp.run(v)
+            return healed
+        raise ValueError(
+            f"expected the full (N={N}, ...) codeword or the (K={K}, ...) "
+            f"survivor symbols of system.kept, got leading dim {v.shape[0]}")
+
+    def rebuild_stream(self, payload, *, chunk_w: int | None = None
+                       ) -> Iterator[np.ndarray]:
+        """Streamed rebuild: generator of fully-healed (N, w) codeword
+        chunks.  `payload` is a (N, W)/(K, W) array or an iterable of such
+        chunks; the repaired rows run through the plan's streaming engine
+        (double-buffered on kernel backends) while the survivor rows ride
+        along as passthrough.  The erasure pattern is pinned at creation;
+        the session is healed (of that pattern) once the stream is
+        exhausted — `CodedCheckpointer.scrub` drives this off survivor
+        memmaps to rebuild shards in place."""
+        from . import stream as stream_mod
+
+        plan = self.decode_plan  # pin ONE pattern for the whole stream
+        cw = (chunk_w or self.chunk_w
+              or stream_mod.default_chunk_w(self.spec.K))
+        N, K, q = self.spec.N, self.spec.K, self.spec.q
+
+        def _gen():
+            import itertools
+
+            split = stream_mod.split_chunks(payload, cw)
+            first = next(split, None)
+            if first is None:
+                self.heal(plan.erased)
+                return
+            rows = first.shape[0]
+            chunks = itertools.chain((first,), split)
+            if rows == N:
+                dplan = plan
+                kept_idx = list(plan.kept)
+                fill = list(plan.erased)
+
+                def slice_fn(c):
+                    return c[kept_idx]
+
+                def assemble(c, y):
+                    healed = (c % q).astype(np.int64)
+                    if fill:
+                        healed[fill] = y
+                    return healed
+            elif rows == K:
+                dplan = self._complement_plan(plan)
+                kept_idx, comp_idx = list(dplan.kept), list(dplan.erased)
+
+                def slice_fn(c):
+                    return c
+
+                def assemble(c, y):
+                    healed = np.empty((N, c.shape[1]), np.int64)
+                    healed[kept_idx] = (c % q).astype(np.int64)
+                    healed[comp_idx] = y
+                    return healed
+            else:
+                raise ValueError(
+                    f"rebuild_stream chunks must carry N={N} codeword rows "
+                    f"or the K={K} kept survivor rows, got {rows}")
+            for c, y in stream_mod.run_paired_stream(dplan, chunks, slice_fn,
+                                                     chunk_w=cw):
+                yield assemble(c, y)
+            self.heal(plan.erased)
+
+        return _gen()
+
     # -- batched submission (coding queue) ----------------------------------
     def _ensure_queue(self):
         with self._lock:
@@ -268,26 +384,60 @@ class CodedSystem:
             return self._queue
 
     def submit(self, op: str, payload):
-        """Submit an "encode" or "decode" request; returns a
+        """Submit an "encode", "decode", or "rebuild" request; returns a
         `concurrent.futures.Future`.  Requests are coalesced with other
         in-flight submissions sharing the same plan into single batched
-        streamed executions (`launch.coding_queue.CodingQueue`).  Decode
-        submissions are pinned to the erasure pattern at submit time."""
+        streamed executions (`launch.coding_queue.CodingQueue`).
+
+        Decode/rebuild submissions pin the erasure pattern at submit time,
+        with *failover*: if a later `fail()` invalidates the pinned
+        pattern before the request is executed (the new pattern is a
+        strict superset), the queue transparently replans against the
+        superset — survivors that died after submission are never
+        consumed, instead of silently serving their stale symbols.  A
+        decode future still resolves to the rows of the pattern it was
+        submitted for; a rebuild future resolves to the fully healed
+        (N, W) codeword (the session is NOT auto-healed — call `heal()` /
+        `rebuild()` once the result is re-materialized).  Failover needs
+        the full (N, ...) payload to re-slice; rebuild requires it
+        outright, and a (K, ...) decode payload whose pattern is
+        invalidated fails its future rather than decode stale rows."""
         if op == "encode":
             return self._ensure_queue().submit_encode(self.spec, payload,
                                                       A=self._A)
-        if op == "decode":
+        if op in ("decode", "rebuild"):
             plan = self.decode_plan  # pin ONE pattern for slice + queue
-            v = self._survivor_view(payload, plan)
-            return self._ensure_queue().submit_decode(self.spec, plan.erased,
-                                                      v, A=self._A)
-        raise ValueError(f"op must be 'encode' or 'decode', got {op!r}")
+            v = np.asarray(payload)
+            if v.shape[0] != self.spec.N and (op == "rebuild"
+                                              or v.shape[0] != self.spec.K):
+                raise ValueError(
+                    f"{op} payload must carry the full N={self.spec.N} "
+                    "codeword rows"
+                    + ("" if op == "rebuild"
+                       else f" (or the K={self.spec.K} kept survivor rows)")
+                    + f", got leading dim {v.shape[0]}")
+            queue = self._ensure_queue()
+            submit = (queue.submit_decode if op == "decode"
+                      else queue.submit_rebuild)
+            return submit(self.spec, plan.erased, v, A=self._A,
+                          pattern_ref=self._live_pattern)
+        raise ValueError(
+            f"op must be 'encode', 'decode' or 'rebuild', got {op!r}")
+
+    def _live_pattern(self) -> tuple[int, ...]:
+        """The CURRENT erasure pattern — handed to queued decode/rebuild
+        requests so the worker can detect a pinned pattern invalidated by
+        a later `fail()` and replan against the superset."""
+        return self.failed
 
     def submit_encode(self, x):
         return self.submit("encode", x)
 
     def submit_decode(self, v):
         return self.submit("decode", v)
+
+    def submit_rebuild(self, v):
+        return self.submit("rebuild", v)
 
     # -- lifecycle / introspection ------------------------------------------
     def close(self) -> None:
@@ -322,14 +472,25 @@ class CodedSystem:
             },
         }
         if self.failed:
-            plan = self.decode_plan
-            out["decode"] = {
-                "erased": plan.erased,
-                "kept": plan.kept,
-                "cost": plan.cost(),
-                "model_us": self.link.us(plan.cost()),
-                "last": plan.last_stats,
-            }
+            from ..recover import UndecodableError
+
+            try:
+                plan = self.decode_plan
+            except UndecodableError as exc:
+                # introspection must not crash on an information-losing
+                # pattern (possible for the non-MDS dft codeword) — report
+                # the degraded-but-undecodable state instead
+                out["decode"] = {"decodable": False, "erased": self.failed,
+                                 "error": str(exc)}
+            else:
+                out["decode"] = {
+                    "decodable": True,
+                    "erased": plan.erased,
+                    "kept": plan.kept,
+                    "cost": plan.cost(),
+                    "model_us": self.link.us(plan.cost()),
+                    "last": plan.last_stats,
+                }
         with self._lock:
             if self._queue is not None:
                 # snapshot, not the live object: the worker thread keeps
@@ -338,7 +499,8 @@ class CodedSystem:
 
                 live = self._queue.stats
                 out["queue"] = QueueStats(live.requests, live.batches,
-                                          list(live.coalesced))
+                                          list(live.coalesced),
+                                          live.failovers)
         from . import cache_info
 
         out["cache"] = cache_info()
@@ -356,6 +518,13 @@ class CodedSystem:
         ]
         lines += ["  " + ln for ln in self._enc.describe().splitlines()]
         if self.failed:
-            lines += ["  " + ln
-                      for ln in self.decode_plan.describe().splitlines()]
+            from ..recover import UndecodableError
+
+            try:
+                dlines = self.decode_plan.describe().splitlines()
+            except UndecodableError:
+                dlines = [f"decode  : UNDECODABLE — erased "
+                          f"{list(self.failed)} is information-losing for "
+                          f"this (non-MDS) code"]
+            lines += ["  " + ln for ln in dlines]
         return "\n".join(lines)

@@ -22,11 +22,19 @@ survivors would execute in-network).  Elastic
 resharding is supported: a checkpoint written with N shards restores onto
 any N' (the flat symbol stream is re-split).
 
+Integrity: `save` records a sha256 of every shard/parity payload in
+meta.json, and `scrub()` is the background-repair pass a coded store runs
+continuously — verify every file on disk against its checksum, then
+rebuild missing/corrupt ones *in place* via the streamed decentralized
+rebuild (`CodedSystem.rebuild_stream` off the survivor memmaps), restoring
+full redundancy without ever materializing the whole codeword.
+
 Async: `save(..., background=True)` hands the write to a daemon thread —
 training continues; `wait()` joins before the next save (single-writer).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
@@ -163,37 +171,48 @@ class CodedCheckpointer:
             if tmp.exists():
                 shutil.rmtree(tmp)
             tmp.mkdir(parents=True)
-            meta2 = dict(meta, N=self.n_shards, R=self.n_parity,
-                         q=self.field.q, step=step)
-            (tmp / "meta.json").write_text(json.dumps(meta2))
+            # per-file sha256 of the symbol payload (the uint32 array
+            # bytes, not the .npy container) — scrub() verifies against
+            # these to localize silent corruption to a file
+            sums: dict[str, str] = {}
             for k in range(self.n_shards):
-                np.save(tmp / f"shard_{k:03d}.npy", shards[k].astype(np.uint32))
+                arr = shards[k].astype(np.uint32)
+                np.save(tmp / f"shard_{k:03d}.npy", arr)
+                sums[f"shard_{k:03d}"] = hashlib.sha256(
+                    arr.tobytes()).hexdigest()
             # parity is STREAMED into preallocated .npy memmaps: the encode
             # runs chunk-by-chunk (double-buffered on the kernel path) and
-            # the full (R, L) parity matrix is never materialized
+            # the full (R, L) parity matrix is never materialized; the
+            # checksums accumulate over exactly the bytes written
             L = shards.shape[1]
             if L == 0:  # empty state: mmap cannot map zero bytes
                 for r in range(self.n_parity):
                     np.save(tmp / f"parity_{r:03d}.npy",
                             np.zeros(0, np.uint32))
-                if final.exists():
-                    shutil.rmtree(final)
-                os.rename(tmp, final)
-                return
-            mms = [np.lib.format.open_memmap(
-                       tmp / f"parity_{r:03d}.npy", mode="w+",
-                       dtype=np.uint32, shape=(L,))
-                   for r in range(self.n_parity)]
-            col = 0
-            for blk in self._parity_stream(shards):
-                w = blk.shape[1]
+                    sums[f"parity_{r:03d}"] = hashlib.sha256(b"").hexdigest()
+            else:
+                mms = [np.lib.format.open_memmap(
+                           tmp / f"parity_{r:03d}.npy", mode="w+",
+                           dtype=np.uint32, shape=(L,))
+                       for r in range(self.n_parity)]
+                hs = [hashlib.sha256() for _ in range(self.n_parity)]
+                col = 0
+                for blk in self._parity_stream(shards):
+                    w = blk.shape[1]
+                    for r in range(self.n_parity):
+                        row = blk[r].astype(np.uint32)
+                        mms[r][col : col + w] = row
+                        hs[r].update(row.tobytes())
+                    col += w
+                assert col == L
+                for mm in mms:
+                    mm.flush()
+                del mms
                 for r in range(self.n_parity):
-                    mms[r][col : col + w] = blk[r].astype(np.uint32)
-                col += w
-            assert col == L
-            for mm in mms:
-                mm.flush()
-            del mms
+                    sums[f"parity_{r:03d}"] = hs[r].hexdigest()
+            meta2 = dict(meta, N=self.n_shards, R=self.n_parity,
+                         q=self.field.q, step=step, sha256=sums)
+            (tmp / "meta.json").write_text(json.dumps(meta2))
             if final.exists():
                 shutil.rmtree(final)
             os.rename(tmp, final)
@@ -297,6 +316,136 @@ class CodedCheckpointer:
         sym = shards.reshape(-1)[: -(-meta["nbytes"] // 2)]
         raw = symbols_to_bytes(sym, meta["nbytes"])
         return bytes_to_tree(raw, meta, example_state)
+
+    # -- scrub: verify on-disk shards, rebuild the bad ones in place --------
+    def scrub(self, step: int | None = None) -> dict:
+        """Verify a checkpoint's shard/parity files and rebuild the
+        missing/corrupt ones in place (the coded store's background
+        integrity pass: fail -> rebuild -> healed, on disk).
+
+        Every file must exist, parse as the expected (L,) uint32 array and
+        match the sha256 recorded at save time (checkpoints written before
+        checksums fall back to a shape + symbol-range check).  Files
+        failing any check count as erasures; as long as they total at most
+        R, the survivors rebuild them bitwise via the streamed
+        decentralized rebuild (`CodedSystem.rebuild_stream` driven off the
+        survivor memmaps — no full-width stack is ever materialized), each
+        rebuilt file is re-verified against its recorded checksum, and the
+        replacement is atomic per file.  Returns a report dict:
+
+            {"step", "checked", "missing", "corrupt", "rebuilt",
+             "verified"}
+        """
+        if step is None:
+            step = self.latest_step()
+            if step is None:
+                raise FileNotFoundError(
+                    f"no checkpoints under {self.directory}")
+        d = Path(self.directory) / f"step_{step:06d}"
+        meta = json.loads((d / "meta.json").read_text())
+        N, R, q = meta["N"], meta["R"], int(meta.get("q", self.field.q))
+        sums: dict = meta.get("sha256", {})
+        sym = -(-meta["nbytes"] // 2)
+        L = -(-sym // N) if sym else 0
+
+        def _name(i: int) -> str:
+            return (f"shard_{i:03d}" if i < N else f"parity_{i - N:03d}")
+
+        missing: list[int] = []
+        corrupt: list[int] = []
+        for i in range(N + R):
+            path = d / (_name(i) + ".npy")
+            if not path.exists():
+                missing.append(i)
+                continue
+            try:
+                mm = np.load(path, mmap_mode="r")
+            except Exception:  # noqa: BLE001 — unparseable container
+                corrupt.append(i)
+                continue
+            if mm.shape != (L,) or mm.dtype != np.uint32:
+                corrupt.append(i)
+                continue
+            expected = sums.get(_name(i))
+            if expected is not None:
+                h = hashlib.sha256()
+                for c0 in range(0, L, 1 << 20):
+                    h.update(np.ascontiguousarray(
+                        mm[c0 : c0 + (1 << 20)]).tobytes())
+                if h.hexdigest() != expected:
+                    corrupt.append(i)
+            elif L and int(np.max(mm)) >= q:
+                corrupt.append(i)  # pre-checksum checkpoint: range check
+        erased = sorted(missing + corrupt)
+        report = {"step": step, "checked": N + R, "missing": missing,
+                  "corrupt": corrupt, "rebuilt": erased, "verified": True}
+        if not erased:
+            return report
+        if len(erased) > R:
+            raise RuntimeError(
+                f"scrub: {len(erased)} missing/corrupt files exceed the "
+                f"code's R={R} — the checkpoint is unrecoverable "
+                f"(missing={missing}, corrupt={corrupt})")
+
+        if L == 0:
+            for e in erased:
+                np.save(d / (_name(e) + ".npy"), np.zeros(0, np.uint32))
+            return report
+
+        spec = CodeSpec(kind="rs", K=N, R=R, q=q)
+        rsys = CodedSystem(
+            spec, backend="local" if q == FERMAT.q else "simulator",
+            chunk_w=self.chunk_w)
+        rsys.fail(erased)
+        kept = rsys.decode_plan.kept
+        srcs = {i: np.load(d / (_name(i) + ".npy"), mmap_mode="r")
+                for i in kept}
+        from ..api.stream import default_chunk_w
+
+        cw = self.chunk_w or default_chunk_w(N)
+        hs = {e: hashlib.sha256() for e in erased}
+        try:
+            tmps = {e: np.lib.format.open_memmap(
+                        d / f".scrub_{_name(e)}.npy", mode="w+",
+                        dtype=np.uint32, shape=(L,))
+                    for e in erased}
+
+            def survivor_chunks():
+                for c0 in range(0, L, cw):
+                    yield np.stack([np.asarray(srcs[i][c0 : c0 + cw],
+                                               np.int64)
+                                    for i in kept])
+
+            col = 0
+            for healed in rsys.rebuild_stream(survivor_chunks()):
+                w = healed.shape[1]
+                for e in erased:
+                    row = healed[e].astype(np.uint32)
+                    tmps[e][col : col + w] = row
+                    hs[e].update(row.tobytes())
+                col += w
+            assert col == L
+            for e in erased:
+                tmps[e].flush()
+            del tmps
+            # verify EVERY rebuilt payload before replacing ANY file: a
+            # checksum mismatch must leave the checkpoint untouched
+            for e in erased:
+                expected = sums.get(_name(e))
+                if expected is not None and hs[e].hexdigest() != expected:
+                    report["verified"] = False
+                    raise RuntimeError(
+                        f"scrub: rebuilt {_name(e)} does not match its "
+                        "recorded checksum — survivors are inconsistent "
+                        "(more corruption than the parity can localize?)")
+            for e in erased:
+                os.replace(d / f".scrub_{_name(e)}.npy",
+                           d / (_name(e) + ".npy"))
+        finally:
+            # never strand .scrub_* temps on a failed rebuild/verify
+            for e in erased:
+                (d / f".scrub_{_name(e)}.npy").unlink(missing_ok=True)
+        return report
 
     def reshard(self, step: int, new_n: int, new_r: int) -> "CodedCheckpointer":
         """Elastic rescale: rewrite step with a different (N, R) layout."""

@@ -51,11 +51,20 @@ from .matrices import (
     vandermonde,
 )
 from .prepare_shoot import cost_universal, prepare_shoot, universal_a2a
-from .simulator import FailedProcessorError, Msg, RoundNetwork, run_lockstep
+from .simulator import (
+    FailedProcessorError,
+    FaultInjector,
+    Msg,
+    PartialRunError,
+    PortViolationError,
+    RoundNetwork,
+    run_lockstep,
+)
 
 __all__ = [
     "FERMAT", "FERMAT_Q", "Field", "FailedProcessorError", "Msg",
     "RoundNetwork", "run_lockstep",
+    "FaultInjector", "PartialRunError", "PortViolationError",
     "prepare_shoot", "universal_a2a", "cost_universal",
     "dft_a2a", "cost_dft", "draw_loose", "cost_draw_loose",
     "StructuredPoints", "SystematicGRS", "StructuredGRSCode",

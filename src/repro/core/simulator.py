@@ -18,6 +18,21 @@ are data-independent, Remark 1).  The network runner:
     disjoint processor groups, e.g. the M column-wise A2As of Sec. III),
   * validates the p-port constraint globally per round,
   * accounts C1 / C2 / total element traffic.
+
+Failure model (Sec. I): `fail(procs)` erases processors statically —
+schedules planned around the erasure set never touch them, and a schedule
+that does raises `FailedProcessorError`.  `fail_at(round, procs)` (or the
+`FaultInjector` driver) additionally injects *live* failures between rounds
+of a running schedule: once `C1` reaches the registered round, the
+processors die, and the first message touching one aborts `run` with a
+structured `PartialRunError` carrying the exact C1/C2 of the completed
+prefix plus each processor's received-so-far element counts — everything a
+repair planner needs to replan against the enlarged erasure set and
+account the aborted prefix plus the retry exactly.
+
+All validation raises real exceptions (`ValueError` for malformed
+messages/positions, `PortViolationError` for port-constraint breaches) —
+never bare `assert`, which `python -O` strips.
 """
 from __future__ import annotations
 
@@ -32,12 +47,62 @@ class Msg:
     n_elems: int  # field elements in this message
 
     def __post_init__(self):
-        assert self.src != self.dst, "self-messages are local ops, not traffic"
-        assert self.n_elems >= 1
+        if self.src == self.dst:
+            raise ValueError(
+                f"self-message {self.src}->{self.dst}: local ops are not "
+                "traffic")
+        if self.n_elems < 1:
+            raise ValueError(f"messages carry >= 1 field elements, got "
+                             f"{self.n_elems}")
 
 
 class FailedProcessorError(RuntimeError):
-    """A schedule tried to route traffic through an erased processor."""
+    """A schedule tried to route traffic through an erased processor.
+
+    `proc` is the erased processor the message touched (None when raised
+    without that context)."""
+
+    def __init__(self, message: str, proc: int | None = None):
+        super().__init__(message)
+        self.proc = proc
+
+
+class PortViolationError(RuntimeError):
+    """A round exceeded the p-port constraint on some processor (more than
+    p sends or p receives)."""
+
+
+class PartialRunError(FailedProcessorError):
+    """`run` aborted because a live-injected kill (`fail_at` /
+    `FaultInjector`) landed mid-schedule.
+
+    The aborted round is NOT accounted (its messages were never
+    delivered); the attributes snapshot everything the recover planner
+    needs to restart the repair against the enlarged erasure set:
+
+        round    — completed rounds when the abort hit (== C1)
+        C1, C2   — the network's exact accounting of the completed prefix
+                   (cumulative over the network's lifetime)
+        proc     — the dead processor whose message aborted the round
+        killed   — all processors killed by live injection so far
+        failed   — the full failure set (static + injected)
+        received — per-processor field elements received so far (only
+                   fully-accounted rounds count; cumulative per network)
+    """
+
+    def __init__(self, net: "RoundNetwork", proc: int):
+        self.round = net.C1
+        self.C1 = net.C1
+        self.C2 = net.C2
+        self.proc = proc
+        self.killed = frozenset(net.injected)
+        self.failed = frozenset(net.failed)
+        self.received = dict(net.received)
+        RuntimeError.__init__(
+            self,
+            f"schedule aborted in round {net.C1 + 1}: processor {proc} was "
+            f"killed mid-run (completed prefix C1={net.C1}, C2={net.C2}; "
+            f"failed={sorted(net.failed)})")
 
 
 @dataclass
@@ -49,6 +114,12 @@ class RoundNetwork:
     `fail(procs)` erases processors: they may neither send nor receive, and
     any schedule touching them raises `FailedProcessorError` — repair
     schedules must route around the erasure set (Sec. I fault model).
+    `fail_at(round, procs)` registers a *live* kill that fires between
+    rounds once C1 reaches `round`; a running schedule that then touches a
+    killed processor aborts with `PartialRunError` (see class docstring).
+    `received` tracks the field elements delivered to each processor in
+    fully-accounted rounds (the received-so-far state a restarted repair
+    can inspect).
     """
 
     n_procs: int
@@ -59,34 +130,80 @@ class RoundNetwork:
     total_elems: int = 0
     round_log: list = dc_field(default_factory=list)
     failed: set = dc_field(default_factory=set)
+    received: dict = dc_field(default_factory=dict)
+    # live-injection state: pending round -> procs, and everything already
+    # killed by injection (distinguishes PartialRunError from the static
+    # FailedProcessorError contract)
+    pending_kills: dict = dc_field(default_factory=dict, repr=False)
+    injected: set = dc_field(default_factory=set, repr=False)
+
+    def _check_procs(self, procs) -> set[int]:
+        procs = {int(q) for q in procs}
+        bad = [q for q in procs if not 0 <= q < self.n_procs]
+        if bad:
+            raise ValueError(
+                f"processors {sorted(bad)} outside [0, {self.n_procs})")
+        return procs
 
     def fail(self, procs) -> None:
         """Mark processors as erased (no sends, no receives, ever after)."""
-        procs = {int(q) for q in procs}
-        bad = [q for q in procs if not 0 <= q < self.n_procs]
-        assert not bad, f"cannot fail out-of-range processors {bad}"
-        self.failed |= procs
+        self.failed |= self._check_procs(procs)
+
+    def fail_at(self, round: int, procs) -> None:
+        """Register a live kill: `procs` die between rounds, as soon as C1
+        reaches `round` (i.e. after `round` rounds have completed).  A
+        running schedule that then touches one aborts with
+        `PartialRunError`; `round` at or beyond a schedule's length simply
+        never fires."""
+        procs = self._check_procs(procs)
+        if round < 0:
+            raise ValueError(f"kill round must be >= 0, got {round}")
+        self.pending_kills.setdefault(int(round), set()).update(procs)
+
+    def apply_pending_kills(self) -> set[int]:
+        """Fire every registered kill whose round has been reached; returns
+        the processors newly killed.  `run` calls this between rounds; a
+        repair driver calls it before (re)planning so a kill due exactly at
+        the restart boundary enlarges the pattern up front."""
+        due = [r for r in self.pending_kills if r <= self.C1]
+        fired: set[int] = set()
+        for r in due:
+            fired |= self.pending_kills.pop(r)
+        self.injected |= fired
+        self.failed |= fired
+        return fired
 
     def _account(self, msgs: list[Msg]) -> None:
         sends: dict[int, int] = {}
         recvs: dict[int, int] = {}
         for m in msgs:
-            assert 0 <= m.src < self.n_procs and 0 <= m.dst < self.n_procs
+            if not (0 <= m.src < self.n_procs and 0 <= m.dst < self.n_procs):
+                raise ValueError(
+                    f"message {m.src}->{m.dst} outside the "
+                    f"{self.n_procs}-processor network")
             if m.src in self.failed or m.dst in self.failed:
                 dead = m.src if m.src in self.failed else m.dst
+                # C1 counts *completed* rounds, so the round being executed
+                # is round C1 + 1 (1-based)
                 raise FailedProcessorError(
-                    f"round {self.C1}: message {m.src}->{m.dst} touches "
-                    f"failed processor {dead}")
+                    f"round {self.C1 + 1}: message {m.src}->{m.dst} touches "
+                    f"failed processor {dead}", proc=dead)
             sends[m.src] = sends.get(m.src, 0) + 1
             recvs[m.dst] = recvs.get(m.dst, 0) + 1
         over_s = {k: v for k, v in sends.items() if v > self.p}
         over_r = {k: v for k, v in recvs.items() if v > self.p}
-        assert not over_s, f"port violation (send): {over_s} with p={self.p}"
-        assert not over_r, f"port violation (recv): {over_r} with p={self.p}"
+        if over_s:
+            raise PortViolationError(
+                f"port violation (send): {over_s} with p={self.p}")
+        if over_r:
+            raise PortViolationError(
+                f"port violation (recv): {over_r} with p={self.p}")
         m_t = max((m.n_elems for m in msgs), default=0)
         self.C1 += 1
         self.C2 += m_t
         self.total_elems += sum(m.n_elems for m in msgs)
+        for m in msgs:
+            self.received[m.dst] = self.received.get(m.dst, 0) + m.n_elems
         if self.keep_log:
             self.round_log.append((len(msgs), m_t))
 
@@ -95,9 +212,13 @@ class RoundNetwork:
 
         A schedule that finishes early simply idles (its processors wait,
         Sec. III-B). Rounds where *no* schedule sends anything are free.
+        Registered `fail_at` kills fire between rounds; if the next round
+        then touches a killed processor, the run aborts with a
+        `PartialRunError` snapshot (the aborted round is not accounted).
         """
         gens = [iter(s) for s in schedules]
         while gens:
+            self.apply_pending_kills()
             round_msgs: list[Msg] = []
             alive = []
             for g in gens:
@@ -108,7 +229,13 @@ class RoundNetwork:
                     pass
             gens = alive
             if round_msgs:
-                self._account(round_msgs)
+                try:
+                    self._account(round_msgs)
+                except FailedProcessorError as exc:
+                    if (not isinstance(exc, PartialRunError)
+                            and exc.proc in self.injected):
+                        raise PartialRunError(self, exc.proc) from exc
+                    raise
             elif gens:
                 # a schedule yielded an empty round (local-compute round):
                 # does not consume network time in the linear cost model
@@ -117,6 +244,42 @@ class RoundNetwork:
     def cost(self, alpha: float, beta_bits: float) -> float:
         """C = alpha*C1 + (beta*ceil(log2 q))*C2 with beta_bits = beta*log2q."""
         return alpha * self.C1 + beta_bits * self.C2
+
+
+@dataclass
+class FaultInjector:
+    """Driver for round-granular failure injection on a `RoundNetwork`.
+
+    Wraps `net.fail_at` with a plan the caller can inspect: `kill_at`
+    registers one kill, `random_kills` draws up to `n_kills` distinct
+    victims at random round boundaries (the chaos-testing entry point —
+    `launch/serve.py --chaos` builds its schedule here).  `plan` lists the
+    registered (round, proc) pairs in registration order.
+    """
+
+    net: RoundNetwork
+    plan: list = dc_field(default_factory=list)
+
+    def kill_at(self, round: int, procs) -> "FaultInjector":
+        self.net.fail_at(round, procs)
+        procs = procs if hasattr(procs, "__iter__") else (procs,)
+        self.plan.extend((int(round), int(q)) for q in procs)
+        return self
+
+    def random_kills(self, rng, candidates, n_kills: int,
+                     max_round: int) -> list[tuple[int, int]]:
+        """Register up to `n_kills` kills of distinct processors drawn from
+        `candidates`, each at a uniform round in [0, max_round]; returns
+        the registered (round, proc) pairs."""
+        candidates = [int(q) for q in candidates]
+        n = min(int(n_kills), len(candidates))
+        victims = rng.choice(candidates, size=n, replace=False) if n else []
+        out = []
+        for v in victims:
+            r = int(rng.integers(0, max_round + 1))
+            self.kill_at(r, (int(v),))
+            out.append((r, int(v)))
+        return out
 
 
 def run_lockstep(*gens):

@@ -1,14 +1,14 @@
-"""Batched request queue: coalesce concurrent encode/decode requests into
-streamed plan executions.
+"""Batched request queue: coalesce concurrent encode/decode/rebuild
+requests into streamed plan executions.
 
 A serving replica receives many small independent coding requests (encode
-these shards, repair that erasure pattern).  Dispatching each one as its
-own `plan.run` pays jit dispatch and transfer overhead per request; the
-queue instead drains whatever is pending, groups requests that share an
-executable plan — same (spec, method/erasure pattern, backend) — and runs
-each group as ONE `plan.run_batched` call, so concurrent payloads ride the
-same chunk callables and the double-buffered stream pipeline
-(api/stream.py).
+these shards, repair that erasure pattern, re-materialize that codeword).
+Dispatching each one as its own `plan.run` pays jit dispatch and transfer
+overhead per request; the queue instead drains whatever is pending, groups
+requests that share an executable plan — same (spec, method/erasure
+pattern, backend) — and runs each group as ONE `plan.run_batched` call, so
+concurrent payloads ride the same chunk callables and the double-buffered
+stream pipeline (api/stream.py).
 
     q = CodingQueue(backend="local")
     fut = q.submit_encode(spec, x)          # returns concurrent Future
@@ -16,13 +16,28 @@ same chunk callables and the double-buffered stream pipeline
     q.close()
 
 This is the engine behind `repro.api.CodedSystem.submit` — a session lazily
-opens one queue on its backend and routes `submit("encode"|"decode", ...)`
-futures through it (erasure patterns pinned at submit time); direct
-`CodingQueue` use remains supported for callers batching across specs.
+opens one queue on its backend and routes `submit("encode"|"decode"|
+"rebuild", ...)` futures through it; direct `CodingQueue` use remains
+supported for callers batching across specs.
+
+Erasure patterns are pinned per request at submit time, with *failover*:
+a request submitted with `pattern_ref` (a callable returning the live
+pattern — sessions pass theirs) is re-checked when the worker drains it.
+If the live pattern has grown into a strict superset of the pinned one —
+processors died while the request sat in the queue — the request is
+transparently replanned against the superset and its (N, W) payload
+re-sliced to the new survivor set, so symbols from dead processors are
+never consumed; a decode future still resolves to the rows of its pinned
+pattern, a rebuild future to the fully healed codeword.  A (K, W)
+survivors-only decode payload cannot be re-sliced: its future fails with a
+`RuntimeError` instead of silently decoding stale rows.
 
 Single worker thread; batching is opportunistic (whatever accumulated
 since the last drain, bounded by `max_batch_w` payload columns per group).
 Correctness is backend-bitwise: results equal per-request `plan.run`.
+`close()` drains everything accepted; if the worker fails to drain within
+the timeout, every still-pending Future is failed with a `RuntimeError`
+and the timeout is raised — accepted futures never dangle unresolved.
 """
 from __future__ import annotations
 
@@ -30,20 +45,22 @@ import queue
 import threading
 from concurrent.futures import Future
 from dataclasses import dataclass, field as dc_field
-from typing import Any
+from typing import Any, Callable
 
 import numpy as np
 
 
 @dataclass
 class _Request:
-    key: tuple                 # plan-cache group key (includes the A digest)
-    op: str                    # "encode" | "decode"
+    op: str                    # "encode" | "decode" | "rebuild"
     spec: Any
-    erased: tuple | None
+    erased: tuple | None       # pinned erasure pattern (decode/rebuild)
     A: Any                     # explicit generator block (or None)
     payload: np.ndarray
     future: Future
+    digest: str | None = None  # A digest (part of the group key)
+    pattern_ref: Callable | None = None  # live-pattern getter (failover)
+    effective: tuple | None = None       # pattern resolved at drain time
 
 
 @dataclass
@@ -51,6 +68,7 @@ class QueueStats:
     requests: int = 0
     batches: int = 0
     coalesced: list[int] = dc_field(default_factory=list)  # group sizes
+    failovers: int = 0         # requests replanned onto a superset pattern
 
     @property
     def max_coalesced(self) -> int:
@@ -58,7 +76,7 @@ class QueueStats:
 
 
 class CodingQueue:
-    """Coalescing encode/decode front-end over the plan caches."""
+    """Coalescing encode/decode/rebuild front-end over the plan caches."""
 
     def __init__(self, backend: str = "local", *,
                  chunk_w: int | None = None, max_batch_w: int = 1 << 16):
@@ -73,6 +91,8 @@ class CodingQueue:
         self.stats = QueueStats()
         self._q: "queue.Queue[_Request | None]" = queue.Queue()
         self._closing = False
+        self._pending: set[Future] = set()
+        self._plock = threading.Lock()
         self._worker = threading.Thread(target=self._loop, daemon=True)
         self._worker.start()
 
@@ -85,22 +105,46 @@ class CodingQueue:
         matrices never coalesce into one plan."""
         from ..api.planner import _digest
 
-        return self._submit(_Request(
-            ("enc", spec, self.backend, _digest(A)), "encode",
-            spec, None, A, np.asarray(x), Future()))
+        return self._submit(_Request("encode", spec, None, A, np.asarray(x),
+                                     Future(), digest=_digest(A)))
 
-    def submit_decode(self, spec, erased, v, A=None) -> Future:
-        """Repair `erased` from survivor symbols v; Future of symbols."""
+    def submit_decode(self, spec, erased, v, A=None,
+                      pattern_ref=None) -> Future:
+        """Repair `erased` from v; Future of the erased symbols (rows
+        ordered like the pinned pattern).  `v` carries either the K kept
+        survivor rows (classic) or the full (N, W) codeword — the worker
+        slices it; the full form is required for failover (`pattern_ref`,
+        see module docstring)."""
         from ..api.planner import _digest
 
         erased = tuple(sorted({int(e) for e in erased}))
-        return self._submit(_Request(
-            ("dec", spec, erased, self.backend, _digest(A)), "decode",
-            spec, erased, A, np.asarray(v), Future()))
+        return self._submit(_Request("decode", spec, erased, A,
+                                     np.asarray(v), Future(),
+                                     digest=_digest(A),
+                                     pattern_ref=pattern_ref))
+
+    def submit_rebuild(self, spec, erased, cw, A=None,
+                       pattern_ref=None) -> Future:
+        """Re-materialize the full codeword: Future of the healed (N, W)
+        with every position of the (possibly failed-over) pattern
+        recomputed.  `cw` must carry the full N codeword rows."""
+        from ..api.planner import _digest
+
+        erased = tuple(sorted({int(e) for e in erased}))
+        cw = np.asarray(cw)
+        if cw.shape[0] != spec.N:
+            raise ValueError(
+                f"rebuild payload must carry the full N={spec.N} codeword "
+                f"rows, got leading dim {cw.shape[0]}")
+        return self._submit(_Request("rebuild", spec, erased, A, cw,
+                                     Future(), digest=_digest(A),
+                                     pattern_ref=pattern_ref))
 
     def _submit(self, req: _Request) -> Future:
         if self._closing or self._worker is None:
             raise RuntimeError("queue is closed")
+        with self._plock:
+            self._pending.add(req.future)
         self._q.put(req)
         return req.future
 
@@ -109,12 +153,27 @@ class CodingQueue:
 
         The worker processes everything still queued (even a request that
         raced past `_submit`'s closed check) before exiting, so no
-        accepted Future is left unresolved."""
+        accepted Future is left unresolved.  If the worker does NOT drain
+        within `timeout`, every still-pending Future is failed with a
+        `RuntimeError` and the same error is raised here — a timed-out
+        close is loud, never a silent return with live futures dangling.
+        """
         if self._worker is None:
             return
         self._closing = True
         self._q.put(None)
         self._worker.join(timeout=timeout)
+        if self._worker.is_alive():
+            with self._plock:
+                stranded = [f for f in self._pending if not f.done()]
+                self._pending.clear()
+            err = RuntimeError(
+                f"CodingQueue.close(): worker did not drain within "
+                f"{timeout}s; {len(stranded)} pending request(s) failed")
+            for fut in stranded:
+                if not fut.done():
+                    fut.set_exception(err)
+            raise err
         self._worker = None
 
     # -- worker side --------------------------------------------------------
@@ -134,6 +193,35 @@ class CodingQueue:
             else:
                 batch.append(nxt)
 
+    def _resolve(self, req: _Request, *, result=None, exc=None) -> None:
+        if not req.future.done():
+            if exc is not None:
+                req.future.set_exception(exc)
+            else:
+                req.future.set_result(result)
+        with self._plock:
+            self._pending.discard(req.future)
+
+    def _effective_pattern(self, req: _Request) -> tuple:
+        """The pattern this request will execute against, resolved at
+        drain time: the pinned pattern, unless `pattern_ref` reports a
+        strict superset (new failures landed since submit) — then the
+        superset, so the plan never consumes dead survivors."""
+        if req.op == "encode" or req.pattern_ref is None:
+            return req.erased or ()
+        live = tuple(sorted({int(e) for e in req.pattern_ref()}))
+        if set(live) > set(req.erased):
+            self.stats.failovers += 1
+            return live
+        return req.erased
+
+    def _group_key(self, req: _Request) -> tuple:
+        if req.op == "encode":
+            return ("enc", req.spec, self.backend, req.digest)
+        # decode and rebuild share the plan (same pattern => same repair
+        # matrix) but not the output contract — keep the op in the key
+        return (req.op, req.spec, req.effective, self.backend, req.digest)
+
     def _loop(self) -> None:
         while True:
             first = self._q.get()
@@ -141,11 +229,50 @@ class CodingQueue:
             self.stats.requests += len(batch)  # single-writer: the worker
             groups: dict[tuple, list[_Request]] = {}
             for req in batch:
-                groups.setdefault(req.key, []).append(req)
+                req.effective = self._effective_pattern(req)
+                groups.setdefault(self._group_key(req), []).append(req)
             for reqs in groups.values():
                 self._process_group(reqs)
             if closing:
                 return
+
+    def _slice(self, req: _Request, plan) -> np.ndarray:
+        """The (K, ...) survivor view `plan` consumes, re-sliced against
+        the EFFECTIVE pattern (failover may have changed plan.kept)."""
+        if req.op == "encode":
+            return req.payload
+        p = req.payload
+        if p.shape[0] == req.spec.N:
+            return p[list(plan.kept)]
+        if p.shape[0] == req.spec.K:
+            if req.effective != req.erased:
+                raise RuntimeError(
+                    f"pattern invalidated mid-flight ({req.erased} -> "
+                    f"{req.effective}) but the request carried only the K "
+                    "kept survivor rows — resubmit with the full (N, W) "
+                    "codeword so the repair can re-slice around the new "
+                    "failures")
+            return p
+        raise ValueError(
+            f"payload must carry N={req.spec.N} or K={req.spec.K} rows, "
+            f"got {p.shape}")
+
+    def _postprocess(self, req: _Request, plan, out: np.ndarray) -> np.ndarray:
+        """Shape the group-plan output into the request's contract."""
+        if req.op == "decode":
+            if req.effective != req.erased:
+                # failover: the plan repaired the superset; the future
+                # still resolves to the rows of the pinned pattern
+                idx = [plan.erased.index(e) for e in req.erased]
+                out = out[idx]
+            return out
+        if req.op == "rebuild":
+            q = req.spec.q
+            healed = (req.payload % q).astype(np.int64)
+            if plan.erased:
+                healed[list(plan.erased)] = out
+            return healed
+        return out
 
     def _process_group(self, reqs: list[_Request]) -> None:
         from ..api import Encoder
@@ -158,27 +285,34 @@ class CodingQueue:
             if r0.op == "encode":
                 plan = Encoder.plan(r0.spec, backend=self.backend, A=r0.A)
             else:
-                plan = Decoder.plan(r0.spec, erased=r0.erased,
+                plan = Decoder.plan(r0.spec, erased=r0.effective,
                                     backend=self.backend, A=r0.A)
-            # bound the coalesced width per run_batched call
-            chunk: list[_Request] = []
-            w = 0
+            # per-request slicing failures (stale K-row payloads) fail
+            # their own future without sinking the rest of the group
+            runnable: list[tuple[_Request, np.ndarray]] = []
             for req in reqs:
-                rw = 1 if req.payload.ndim == 1 else req.payload.shape[1]
+                try:
+                    runnable.append((req, self._slice(req, plan)))
+                except Exception as exc:  # noqa: BLE001 — per-future
+                    self._resolve(req, exc=exc)
+            # bound the coalesced width per run_batched call
+            chunk: list[tuple[_Request, np.ndarray]] = []
+            w = 0
+            for req, v in runnable:
+                rw = 1 if v.ndim == 1 else v.shape[1]
                 if chunk and w + rw > self.max_batch_w:
                     self._run_group(plan, chunk)
                     chunk, w = [], 0
-                chunk.append(req)
+                chunk.append((req, v))
                 w += rw
             if chunk:
                 self._run_group(plan, chunk)
         except Exception as exc:  # noqa: BLE001 — propagate per-future
             for req in reqs:
-                if not req.future.done():
-                    req.future.set_exception(exc)
+                self._resolve(req, exc=exc)
 
-    def _run_group(self, plan, reqs: list[_Request]) -> None:
-        outs = plan.run_batched([r.payload for r in reqs],
-                                chunk_w=self.chunk_w)
-        for req, out in zip(reqs, outs):
-            req.future.set_result(out)
+    def _run_group(self, plan,
+                   reqs: list[tuple[_Request, np.ndarray]]) -> None:
+        outs = plan.run_batched([v for _, v in reqs], chunk_w=self.chunk_w)
+        for (req, _), out in zip(reqs, outs):
+            self._resolve(req, result=self._postprocess(req, plan, out))

@@ -18,11 +18,83 @@ path end to end.
 N concurrent encode and degraded-read decode requests are submitted from
 worker threads, coalesced into streamed `run_batched` plan executions
 (`launch.coding_queue.CodingQueue` underneath), and every result is
-verified bitwise against a direct per-request `plan.run`."""
+verified bitwise against a direct per-request `plan.run`.
+
+`--chaos R,SEED` is the failure-injection scenario: first a mid-schedule
+leg (a `FaultInjector` kills up to R processors at random rounds of a
+running repair schedule; `repair_with_faults` restarts against each
+enlarged erasure set with exact C1/C2 accounting), then a serving leg
+(random `fail()`s race queued encode/decode/rebuild submissions through
+one `CodedSystem`, exercising the queue's superset failover), and finally
+a full `rebuild` back to health — every result self-checked bitwise
+against the original codeword."""
 from __future__ import annotations
 
 import argparse
 import time
+
+
+def _chaos_demo(max_kills: int, seed: int, n_shards: int,
+                n_parity: int) -> None:
+    import numpy as np
+
+    from ..api import CodedSystem, CodeSpec
+    from ..core.field import FERMAT
+    from ..core.simulator import FaultInjector, RoundNetwork
+    from ..recover import repair_with_faults
+
+    max_kills = max(1, min(int(max_kills), n_parity))
+    rng = np.random.default_rng(seed)
+    spec = CodeSpec(kind="rs", K=n_shards, R=n_parity)
+    x = FERMAT.rand((n_shards, 128), rng)
+    system = CodedSystem(spec, backend="local")
+    cw = system.codeword(x)
+
+    # -- leg 1: mid-schedule kills on the round network -------------------
+    first = int(rng.integers(0, spec.N))
+    net = RoundNetwork(spec.N, spec.p)
+    inj = FaultInjector(net)
+    # small-K repair schedules run only a handful of rounds — keep the
+    # injection window inside them so kills actually land mid-schedule
+    kills = inj.random_kills(rng, [i for i in range(spec.N) if i != first],
+                             max_kills - 1, max_round=2)
+    report = repair_with_faults(spec, cw, erased=(first,), net=net)
+    assert np.array_equal(report.codeword, cw), "chaos repair mismatch"
+    assert net.C1 == sum(a.C1 for a in report.attempts), "C1 accounting"
+    assert net.C2 == sum(a.C2 for a in report.attempts), "C2 accounting"
+    print(f"chaos mid-schedule OK: kill {{{first}}} at start + injected "
+          f"{kills or 'none'}; {report.restarts} restart(s) across "
+          f"{len(report.attempts)} attempt(s), final |E|="
+          f"{len(report.erased)}, exact C1={net.C1} C2={net.C2} (bitwise)")
+
+    # -- leg 2: random fail()s racing queued submissions ------------------
+    futs = []
+    for _ in range(6 * max_kills):
+        roll = rng.random()
+        if roll < 0.35 and len(system.failed) < n_parity:
+            alive = [i for i in range(spec.N) if i not in system.failed]
+            system.fail(int(rng.choice(alive)))
+        elif roll < 0.55:
+            futs.append(("encode", None, system.submit("encode", x)))
+        elif roll < 0.80:
+            futs.append(("decode", system.failed,
+                         system.submit("decode", cw)))
+        else:
+            futs.append(("rebuild", None, system.submit("rebuild", cw)))
+    for op, pinned, fut in futs:
+        got = fut.result(timeout=120)
+        ref = (cw[n_shards:] if op == "encode"
+               else cw[list(pinned)] if op == "decode" else cw)
+        assert np.array_equal(got, ref), f"queued {op} self-check failed"
+    stats = system.stats()
+    healed = system.rebuild(cw)
+    assert np.array_equal(healed, cw) and system.failed == (), "rebuild"
+    qs = stats.get("queue")
+    system.close()
+    print(f"chaos serving OK: {len(futs)} queued ops under "
+          f"{len(stats['failed'])} live failures "
+          f"({qs.failovers if qs else 0} superset failover(s)); "
+          "rebuild -> healed, all bitwise")
 
 
 def _queue_demo(n_requests: int, n_shards: int, n_parity: int) -> None:
@@ -133,9 +205,19 @@ def main():
     ap.add_argument("--queue-demo", type=int, default=0, metavar="N",
                     help="drive the batched coding queue with N concurrent "
                          "encode+decode clients and verify bitwise")
+    ap.add_argument("--chaos", default=None, metavar="R,SEED",
+                    help="failure-injection scenario: kill up to R "
+                         "processors at random rounds while serving queued "
+                         "encodes/decodes/rebuilds, self-check bitwise")
     args = ap.parse_args()
     if args.degraded and not args.coded_selfcheck:
         ap.error("--degraded modifies the self-check; pass --coded-selfcheck")
+    if args.chaos:
+        try:
+            kills, seed = (int(t) for t in args.chaos.split(","))
+        except ValueError:
+            ap.error("--chaos expects R,SEED (e.g. --chaos 3,7)")
+        _chaos_demo(kills, seed, args.coded_shards, args.coded_parity)
     if args.queue_demo:
         _queue_demo(args.queue_demo, args.coded_shards, args.coded_parity)
 

@@ -20,9 +20,17 @@ repair matrix, batch blocks, compiled mesh executables — are cached per
 `engine` for the round-network schedule and its exact closed-form cost.
 """
 from .engine import decentralized_decode, decode_batches, decode_cost
-from .planner import DecodePlan, Decoder, UndecodableError
+from .planner import (
+    DecodePlan,
+    Decoder,
+    RepairAttempt,
+    RepairReport,
+    UndecodableError,
+    repair_with_faults,
+)
 
 __all__ = [
     "Decoder", "DecodePlan", "UndecodableError",
+    "RepairAttempt", "RepairReport", "repair_with_faults",
     "decentralized_decode", "decode_batches", "decode_cost",
 ]

@@ -40,7 +40,8 @@ from ..api.spec import CodeSpec
 from ..core.cost_model import LinearCost
 from ..core.field import FERMAT_Q, Field
 from ..core.matrices import gauss_inverse
-from .engine import batch_block, decode_batches, decode_cost
+from ..core.simulator import PartialRunError, RoundNetwork
+from .engine import batch_block, decentralized_decode, decode_batches, decode_cost
 
 
 class UndecodableError(ValueError):
@@ -321,6 +322,111 @@ class DecodePlan(PlanStats):
             f"  cost    : C1={c.C1} rounds, C2={c.C2} elems/port "
             f"(model C ~ {model_us:.1f} us)",
         ])
+
+
+# ---------------------------------------------------------------------------
+# live-failure repair: restart the decode against the enlarged erasure set
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class RepairAttempt:
+    """One (re)planned decode attempt inside `repair_with_faults`: the
+    pattern it targeted, the exact rounds/traffic it consumed on the shared
+    network (for an aborted attempt, the completed prefix only), and — when
+    aborted — the processors whose mid-run death enlarged the pattern."""
+
+    erased: tuple[int, ...]
+    C1: int
+    C2: int
+    completed: bool
+    killed: tuple[int, ...] = ()
+
+
+@dataclass
+class RepairReport:
+    """Result of `repair_with_faults`: the fully healed codeword, the plan
+    of the final (largest) erasure pattern, the network whose cumulative
+    C1/C2 account every aborted prefix plus the successful retry exactly
+    (tests assert `net.C1 == sum(a.C1 for a in attempts)` and the last
+    attempt's C1 equals the closed-form `decode_cost`), and the per-attempt
+    trace."""
+
+    codeword: np.ndarray
+    plan: "DecodePlan"
+    net: RoundNetwork
+    attempts: list[RepairAttempt]
+
+    @property
+    def erased(self) -> tuple[int, ...]:
+        """The final erasure pattern the repair recomputed."""
+        return self.plan.erased
+
+    @property
+    def restarts(self) -> int:
+        return sum(1 for a in self.attempts if not a.completed)
+
+
+def repair_with_faults(spec: CodeSpec, cw, erased=(), *,
+                       net: RoundNetwork | None = None,
+                       A: np.ndarray | None = None) -> RepairReport:
+    """Repair `erased` on the round network under live failure injection.
+
+    Runs the decode-as-encode schedule among the survivors of `erased` on
+    `net` (a fresh `RoundNetwork(spec.N, spec.p)` by default — pass one
+    with `fail_at` kills registered, e.g. via `core.FaultInjector`, to
+    inject chaos).  When a kill lands mid-schedule, the resulting
+    `PartialRunError` is caught, the erasure set enlarged by the newly
+    dead processors, and the repair *restarted* against the superset
+    pattern on the SAME network — so `net.C1`/`net.C2` account the aborted
+    prefix plus the retry exactly.  A kill that hits an idle survivor
+    (one the schedule never touches) still loses that symbol: a follow-up
+    pass recomputes it before returning.
+
+    `cw` is the full (N, W) (or (N,)) codeword; rows at erased positions
+    are ignored.  Returns a `RepairReport` whose `codeword` is the fully
+    healed (N, W) — bitwise-equal to the original for any total failure
+    count <= R (beyond R, `Decoder.plan` refuses with the usual
+    `ValueError`; information-losing dft patterns raise
+    `UndecodableError`).
+    """
+    cw = np.asarray(cw)
+    squeeze = cw.ndim == 1
+    v2 = cw[:, None] if squeeze else cw
+    if v2.shape[0] != spec.N:
+        raise ValueError(
+            f"cw must carry the full N={spec.N} codeword rows, got "
+            f"{cw.shape}")
+    net = net or RoundNetwork(spec.N, spec.p)
+    net.fail({int(e) for e in erased})
+    attempts: list[RepairAttempt] = []
+    while True:
+        # a kill due exactly at this round boundary enlarges the pattern
+        # BEFORE planning (it would abort the very first round otherwise)
+        net.apply_pending_kills()
+        pattern = tuple(sorted(net.failed))
+        plan = Decoder.plan(spec, erased=pattern, backend="simulator", A=A)
+        c1_0, c2_0 = net.C1, net.C2
+        f = plan.field
+        v = f.arr(v2[list(plan.kept)])
+        try:
+            y, _ = decentralized_decode(f, plan.tables.D, v,
+                                        list(plan.kept), spec.p, net)
+        except PartialRunError as exc:
+            attempts.append(RepairAttempt(
+                pattern, net.C1 - c1_0, net.C2 - c2_0, completed=False,
+                killed=tuple(sorted(set(exc.failed) - set(pattern)))))
+            continue
+        attempts.append(RepairAttempt(
+            pattern, net.C1 - c1_0, net.C2 - c2_0, completed=True))
+        if net.failed - set(pattern):
+            # an idle survivor died mid-run without aborting the schedule;
+            # its symbol is lost all the same — repair the superset too
+            continue
+        healed = (v2 % spec.q).astype(np.int64)
+        if pattern:
+            healed[list(pattern)] = np.asarray(y, np.int64)
+        return RepairReport(healed[:, 0] if squeeze else healed, plan, net,
+                            attempts)
 
 
 # ---------------------------------------------------------------------------

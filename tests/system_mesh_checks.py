@@ -4,8 +4,10 @@ companion of test_system.py — jax locks the device count at first init).
 For every code kind, the session round-trip `encode -> fail -> read ->
 heal -> encode` must produce bitwise-identical codewords, repaired
 symbols, and degraded reads across all three built-in backends
-("simulator", "local", "mesh"), and the mesh backend's declared device
-requirement must be enforced at plan time.
+("simulator", "local", "mesh"), the full `rebuild` (from the (N, W)
+codeword AND from (K, W) kept survivors, streamed included) must
+re-materialize the identical codeword on all three, and the mesh
+backend's declared device requirement must be enforced at plan time.
 
 Prints 'SYSTEM_MESH_CHECKS_OK' on success; any assertion failure is fatal.
 """
@@ -47,6 +49,20 @@ for kind, K, R, erased in cases:
         system.heal()
         assert np.array_equal(system.encode(x), cw[K:]), \
             (kind, backend, "re-encode")
+        # rebuild: recompute ALL failed symbols, return the healed (N, W)
+        system.fail(erased)
+        assert np.array_equal(system.rebuild(cw), cw), \
+            (kind, backend, "rebuild")
+        assert system.failed == ()
+        system.fail(erased)
+        assert np.array_equal(system.rebuild(cw[list(system.kept)]), cw), \
+            (kind, backend, "rebuild from survivors")
+        system.fail(erased)
+        streamed = np.concatenate(
+            list(system.rebuild_stream(cw, chunk_w=8)), axis=1)
+        assert np.array_equal(streamed, cw), \
+            (kind, backend, "rebuild_stream")
+        assert system.failed == ()
         outs[backend] = (cw, lost, data)
     for backend in ("local", "mesh"):
         for ya, yb in zip(outs["simulator"], outs[backend]):

@@ -103,13 +103,14 @@ def test_nonsystematic(K, R, p):
 
 
 def test_port_constraint_enforced():
-    """The simulator rejects schedules that exceed p ports."""
-    from repro.core.simulator import Msg
+    """The simulator rejects schedules that exceed p ports — with a real
+    exception (`PortViolationError`), not an -O-strippable assert."""
+    from repro.core.simulator import Msg, PortViolationError
 
     net = RoundNetwork(4, p=1)
 
     def bad():
         yield [Msg(0, 1, 1), Msg(0, 2, 1)]  # two sends from proc 0, p=1
 
-    with pytest.raises(AssertionError, match="port violation"):
+    with pytest.raises(PortViolationError, match="port violation"):
         net.run(bad())

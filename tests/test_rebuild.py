@@ -1,0 +1,609 @@
+"""Live failure injection + decentralized rebuild.
+
+Covers the round-granular fault model (`fail_at` / `FaultInjector` /
+`PartialRunError` with exact aborted-prefix accounting and the
+`repair_with_faults` restart driver), `CodedSystem.rebuild` /
+`rebuild_stream` (bitwise across backends for all four kinds, healing
+semantics, checkpoint `scrub()`), the queue's rebuild op and superset
+failover under erasure churn, and the failure-path bugfixes: simulator
+validation as real exceptions, `stats()`/`describe()` on undecodable dft
+patterns, and `CodingQueue.close()` failing (not stranding) timed-out
+futures."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    Backend,
+    CodedSystem,
+    CodeSpec,
+    register_backend,
+    unregister_backend,
+)
+from repro.core.field import FERMAT
+from repro.core.simulator import (
+    FailedProcessorError,
+    FaultInjector,
+    Msg,
+    PartialRunError,
+    PortViolationError,
+    RoundNetwork,
+)
+from repro.launch.coding_queue import CodingQueue
+from repro.recover import Decoder, decode_cost, repair_with_faults
+
+RNG = np.random.default_rng(41)
+
+# decodable patterns per kind (mixing data and parity positions)
+CASES = [
+    ("universal", 8, 4, (0, 9)),
+    ("rs", 8, 4, (2, 4, 11)),
+    ("lagrange", 8, 4, (1, 10)),
+    ("dft", 8, 8, (5, 9, 13)),
+]
+# |E|=6 <= R=8 but information-losing for the non-MDS dft codeword
+DFT_UNDECODABLE = (0, 2, 4, 6, 8, 9)
+
+
+def _spec(kind, K, R, **kw):
+    if kind == "universal":
+        kw.setdefault("seed", 5)
+    return CodeSpec(kind=kind, K=K, R=R, **kw)
+
+
+def _codeword(spec, x, backend="simulator"):
+    s = CodedSystem(spec, backend=backend)
+    return s.codeword(x)
+
+
+# ---------------------------------------------------------------------------
+# simulator validation: real exceptions, correct round label
+# ---------------------------------------------------------------------------
+
+def test_msg_validation_raises_value_error():
+    with pytest.raises(ValueError, match="self-message"):
+        Msg(3, 3, 1)
+    with pytest.raises(ValueError, match=">= 1"):
+        Msg(0, 1, 0)
+
+
+def test_account_rejects_out_of_range_and_port_violations():
+    net = RoundNetwork(4, p=1)
+    with pytest.raises(ValueError, match="outside"):
+        net._account([Msg(0, 7, 1)])
+    with pytest.raises(PortViolationError, match=r"\(send\)"):
+        net._account([Msg(0, 1, 1), Msg(0, 2, 1)])
+    with pytest.raises(PortViolationError, match=r"\(recv\)"):
+        net._account([Msg(1, 0, 1), Msg(2, 0, 1)])
+    assert net.C1 == 0  # nothing was accounted
+
+
+def test_failed_processor_error_labels_the_current_round():
+    """Regression: the message used to say `round {C1}` — the *previous*
+    round, since C1 increments only after the check."""
+    net = RoundNetwork(4, p=1)
+    net.fail([2])
+    with pytest.raises(FailedProcessorError, match="round 1:") as ei:
+        net._account([Msg(0, 2, 1)])
+    assert ei.value.proc == 2
+    net._account([Msg(0, 1, 1)])  # round 1 completes
+    with pytest.raises(FailedProcessorError, match="round 2:"):
+        net._account([Msg(2, 0, 1)])
+
+
+def test_received_accounting():
+    net = RoundNetwork(4, p=2)
+    net._account([Msg(0, 1, 5), Msg(2, 1, 3), Msg(3, 0, 2)])
+    assert net.received == {1: 8, 0: 2}
+
+
+# ---------------------------------------------------------------------------
+# fail_at / PartialRunError: round-granular kills
+# ---------------------------------------------------------------------------
+
+def _decode_sim(spec, cw, erased, net):
+    plan = Decoder.plan(spec, erased=erased, backend="simulator")
+    from repro.recover import decentralized_decode
+
+    net.fail(erased)
+    return decentralized_decode(FERMAT, plan.tables.D,
+                                FERMAT.arr(cw[list(plan.kept)]),
+                                list(plan.kept), spec.p, net)
+
+
+def test_mid_schedule_kill_raises_partial_run_error():
+    spec = _spec("rs", 8, 4)
+    cw = _codeword(spec, FERMAT.rand((8, 3), RNG))
+    net = RoundNetwork(spec.N, spec.p)
+    net.fail_at(1, (3,))
+    with pytest.raises(PartialRunError) as ei:
+        _decode_sim(spec, cw, (0, 9), net)
+    e = ei.value
+    # the aborted round is NOT accounted: exactly the 1-round prefix
+    assert e.round == 1 and e.C1 == 1 == net.C1
+    assert e.C2 == net.C2 > 0
+    assert e.proc == 3 and e.killed == frozenset({3})
+    assert set(e.failed) == {0, 3, 9}
+    # received-so-far state of the completed prefix, per processor
+    assert e.received == net.received and sum(e.received.values()) > 0
+    # PartialRunError still is a FailedProcessorError (old catch sites)
+    assert isinstance(e, FailedProcessorError)
+
+
+def test_kill_beyond_schedule_never_fires():
+    spec = _spec("rs", 8, 4)
+    cw = _codeword(spec, FERMAT.rand((8, 2), RNG))
+    net = RoundNetwork(spec.N, spec.p)
+    net.fail_at(10_000, (3,))
+    y, _ = _decode_sim(spec, cw, (0,), net)
+    assert np.array_equal(y, cw[[0]])
+    assert 3 not in net.failed  # pending, never applied
+
+
+def test_static_failures_still_raise_plain_error():
+    """Touching a *statically* failed processor stays the hard contract
+    error — PartialRunError is reserved for live-injected kills."""
+    net = RoundNetwork(4, 1)
+    net.fail([2])
+
+    def bad():
+        yield [Msg(0, 2, 1)]
+
+    with pytest.raises(FailedProcessorError) as ei:
+        net.run(bad())
+    assert not isinstance(ei.value, PartialRunError)
+
+
+def test_fault_injector_plan_and_random_kills():
+    net = RoundNetwork(8, 1)
+    inj = FaultInjector(net)
+    inj.kill_at(2, (1,)).kill_at(5, (3, 4))
+    assert set(inj.plan) == {(2, 1), (5, 3), (5, 4)}
+    rng = np.random.default_rng(3)
+    kills = inj.random_kills(rng, candidates=range(8), n_kills=2,
+                             max_round=6)
+    assert len(kills) == 2 and all(0 <= r <= 6 for r, _ in kills)
+    assert len({p for _, p in kills}) == 2  # distinct victims
+
+
+# ---------------------------------------------------------------------------
+# repair_with_faults: restart against the enlarged erasure set
+# ---------------------------------------------------------------------------
+
+def test_repair_no_faults_matches_closed_form():
+    spec = _spec("rs", 8, 4)
+    W = 3
+    cw = _codeword(spec, FERMAT.rand((8, W), RNG))
+    rep = repair_with_faults(spec, cw, erased=(0, 9))
+    assert np.array_equal(rep.codeword, cw)
+    assert rep.restarts == 0 and len(rep.attempts) == 1
+    c = decode_cost(8, 2, spec.p)
+    a = rep.attempts[0]
+    assert a.completed and (a.C1, a.C2) == (c.C1, c.C2 * W)
+    assert (rep.net.C1, rep.net.C2) == (c.C1, c.C2 * W)
+
+
+@pytest.mark.parametrize("kind,K,R,erased", CASES)
+def test_repair_with_mid_schedule_kill_all_kinds(kind, K, R, erased):
+    """A kill aborting the schedule mid-run recovers to the correct full
+    codeword, with the network accounting the aborted prefix plus the
+    retry EXACTLY (last attempt == closed form)."""
+    spec = _spec(kind, K, R)
+    W = 4
+    cw = _codeword(spec, FERMAT.rand((K, W), RNG))
+    base = Decoder.plan(spec, erased=erased, backend="simulator")
+    victim = base.kept[1]  # an active survivor: guaranteed mid-run traffic
+    net = RoundNetwork(spec.N, spec.p)
+    FaultInjector(net).kill_at(1, (victim,))
+    rep = repair_with_faults(spec, cw, erased=erased, net=net)
+    assert np.array_equal(rep.codeword, cw), (kind, erased)
+    assert victim in rep.erased and set(erased) <= set(rep.erased)
+    # exact accounting: totals are the sum of per-attempt deltas, and the
+    # final (completed) attempt costs exactly the closed form
+    assert net.C1 == sum(a.C1 for a in rep.attempts)
+    assert net.C2 == sum(a.C2 for a in rep.attempts)
+    last = rep.attempts[-1]
+    c = decode_cost(K, len(last.erased), spec.p)
+    assert last.completed and (last.C1, last.C2) == (c.C1, c.C2 * W)
+    aborted = [a for a in rep.attempts if not a.completed]
+    assert aborted and victim in aborted[0].killed
+    assert aborted[0].C1 < decode_cost(K, len(erased), spec.p).C1
+
+
+def test_repair_kill_at_round_zero_planned_around():
+    """A kill due before the first round enlarges the pattern up front —
+    no abort, one attempt."""
+    spec = _spec("rs", 8, 4)
+    cw = _codeword(spec, FERMAT.rand((8, 2), RNG))
+    net = RoundNetwork(spec.N, spec.p)
+    net.fail_at(0, (4,))
+    rep = repair_with_faults(spec, cw, erased=(0,), net=net)
+    assert np.array_equal(rep.codeword, cw)
+    assert rep.restarts == 0 and rep.erased == (0, 4)
+
+
+def test_repair_idle_survivor_kill_gets_followup_pass():
+    """A kill landing on a processor the schedule no longer touches does
+    not abort — but its symbol is still lost, so a follow-up pass must
+    recompute it before the repair returns."""
+    spec = _spec("rs", 8, 4)
+    cw = _codeword(spec, FERMAT.rand((8, 3), RNG))
+    # the (0, 9) decode runs 3 rounds; proc 3 idles in the final round
+    net = RoundNetwork(spec.N, spec.p)
+    net.fail_at(2, (3,))
+    rep = repair_with_faults(spec, cw, erased=(0, 9), net=net)
+    assert np.array_equal(rep.codeword, cw)
+    assert 3 in rep.erased
+    assert all(a.completed for a in rep.attempts) and len(rep.attempts) == 2
+
+
+def test_repair_beyond_R_refused():
+    spec = _spec("rs", 8, 4)
+    cw = _codeword(spec, FERMAT.rand((8, 2), RNG))
+    net = RoundNetwork(spec.N, spec.p)
+    FaultInjector(net).kill_at(1, (4, 5))
+    with pytest.raises(ValueError, match="exceed"):
+        repair_with_faults(spec, cw, erased=(0, 1, 2), net=net)
+
+
+def test_repair_validates_leading_dim():
+    spec = _spec("rs", 8, 4)
+    with pytest.raises(ValueError, match="N=12"):
+        repair_with_faults(spec, FERMAT.rand((8, 2), RNG), erased=(0,))
+
+
+# ---------------------------------------------------------------------------
+# CodedSystem.rebuild / rebuild_stream
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("kind,K,R,erased", CASES)
+def test_rebuild_bitwise_across_backends(kind, K, R, erased):
+    spec = _spec(kind, K, R)
+    x = FERMAT.rand((K, 5), RNG)
+    outs = {}
+    for backend in ("simulator", "local"):
+        system = CodedSystem(spec, backend=backend)
+        cw = system.codeword(x)
+        # full (N, W) codeword input
+        system.fail(erased)
+        healed = system.rebuild(cw)
+        assert np.array_equal(healed, cw), (kind, backend)
+        assert system.failed == ()  # rebuild heals
+        # (K, W) kept-ordered survivors input: the unkept survivor rows
+        # are recomputed too (complement-pattern decode)
+        system.fail(erased)
+        healed2 = system.rebuild(cw[list(system.kept)])
+        assert np.array_equal(healed2, cw), (kind, backend, "K-input")
+        assert system.failed == ()
+        outs[backend] = healed
+    assert np.array_equal(outs["simulator"], outs["local"])
+
+
+def test_rebuild_shapes_and_healthy():
+    spec = _spec("rs", 8, 4)
+    system = CodedSystem(spec, backend="simulator")
+    x = FERMAT.rand((8,), RNG)
+    cw = system.codeword(x)
+    system.fail((0, 9))
+    assert np.array_equal(system.rebuild(cw), cw)  # 1-D round-trips
+    # healthy rebuild: passthrough for N rows, parity recompute for K rows
+    assert np.array_equal(system.rebuild(cw), cw)
+    assert np.array_equal(system.rebuild(x), cw)
+    with pytest.raises(ValueError, match="leading dim"):
+        system.rebuild(cw[:5])
+
+
+def test_rebuild_stream_bitwise_and_heals_on_exhaustion():
+    spec = _spec("rs", 8, 4)
+    system = CodedSystem(spec, backend="local")
+    x = FERMAT.rand((8, 300), RNG)
+    cw = system.codeword(x)
+    system.fail((2, 4, 11))
+    got = np.concatenate(list(system.rebuild_stream(cw, chunk_w=128)),
+                         axis=1)
+    assert np.array_equal(got, cw)
+    assert system.failed == ()
+    # ragged (N, w) chunks and (K, w) survivor chunks both work
+    system.fail((2, 4, 11))
+    kept = list(system.kept)
+    got2 = np.concatenate(list(system.rebuild_stream(
+        (cw[:, i : i + 77] for i in range(0, 300, 77)), chunk_w=128)),
+        axis=1)
+    assert np.array_equal(got2, cw)
+    system.fail((2, 4, 11))
+    got3 = np.concatenate(list(system.rebuild_stream(
+        (cw[kept, i : i + 64] for i in range(0, 300, 64)))), axis=1)
+    assert np.array_equal(got3, cw)
+    assert system.failed == ()
+    # an unconsumed stream heals nothing
+    system.fail((2,))
+    stream = system.rebuild_stream(cw)
+    assert system.failed == (2,)
+    list(stream)
+    assert system.failed == ()
+    system.close()
+
+
+def test_rebuild_stream_pins_pattern_and_heals_only_it():
+    """Erasure churn mid-stream: chunks in flight keep the pattern pinned
+    at creation, and exhaustion heals ONLY that pattern — a concurrent
+    fail() landing mid-rebuild stays failed."""
+    spec = _spec("rs", 8, 4)
+    system = CodedSystem(spec, backend="simulator")
+    x = FERMAT.rand((8, 60), RNG)
+    cw = system.codeword(x)
+    system.fail((0, 9))
+    stream = system.rebuild_stream(cw, chunk_w=16)
+    first = next(stream)
+    system.fail(3)  # lands mid-rebuild
+    rest = list(stream)
+    healed = np.concatenate([first] + rest, axis=1)
+    assert np.array_equal(healed, cw)  # pinned pattern: 3 never consulted
+    assert system.failed == (3,)       # ...and stays failed after healing
+
+
+def test_decode_stream_pinned_under_churn():
+    spec = _spec("rs", 8, 4)
+    system = CodedSystem(spec, backend="simulator")
+    x = FERMAT.rand((8, 40), RNG)
+    cw = system.codeword(x)
+    system.fail((1, 8))
+    stream = system.decode_stream(cw, chunk_w=8)
+    first = next(stream)
+    system.fail(5)
+    system.heal(1)  # shrink AND grow while chunks are in flight
+    rep = np.concatenate([first] + list(stream), axis=1)
+    assert np.array_equal(rep, cw[[1, 8]])  # the pattern pinned at creation
+
+
+# ---------------------------------------------------------------------------
+# queued rebuild + superset failover
+# ---------------------------------------------------------------------------
+
+def test_submit_rebuild_roundtrip():
+    spec = _spec("rs", 8, 4)
+    with CodedSystem(spec, backend="local") as system:
+        x = FERMAT.rand((8, 17), RNG)
+        cw = system.codeword(x)
+        system.fail((0, 9))
+        fut = system.submit("rebuild", cw)
+        assert np.array_equal(fut.result(timeout=60), cw)
+        # queued rebuild does NOT auto-heal (the worker must not mutate
+        # session state behind the caller's back)
+        assert system.failed == (0, 9)
+        with pytest.raises(ValueError, match="full N=12"):
+            system.submit("rebuild", cw[list(system.kept)])
+        with pytest.raises(ValueError, match="op must be"):
+            system.submit("transmogrify", cw)
+
+
+def test_queue_failover_avoids_dead_rows():
+    """The pinned pattern is invalidated by a strict-superset live
+    pattern: the queue must replan and never consume the newly-dead rows
+    (here poisoned to prove they are untouched).  A decode future still
+    resolves to its pinned rows; a rebuild future recomputes ALL superset
+    positions."""
+    spec = _spec("rs", 8, 4)
+    x = FERMAT.rand((8, 6), RNG)
+    cw = _codeword(spec, x, backend="local")
+    E1, E2 = (0, 9), (0, 2, 9)
+    poisoned = cw.copy()
+    poisoned[2] = (poisoned[2] + 12345) % spec.q  # proc 2 died post-submit
+    q = CodingQueue(backend="local")
+    try:
+        fd = q.submit_decode(spec, E1, poisoned, pattern_ref=lambda: E2)
+        assert np.array_equal(fd.result(timeout=60), cw[list(E1)])
+        fr = q.submit_rebuild(spec, E1, poisoned, pattern_ref=lambda: E2)
+        assert np.array_equal(fr.result(timeout=60), cw)
+        assert q.stats.failovers == 2
+        # a K-row payload cannot be re-sliced: fails loudly, no stale rows
+        plan1 = Decoder.plan(spec, erased=E1, backend="local")
+        fk = q.submit_decode(spec, E1, cw[list(plan1.kept)],
+                             pattern_ref=lambda: E2)
+        with pytest.raises(RuntimeError, match="invalidated"):
+            fk.result(timeout=60)
+        # a SHRUNK pattern (heal) is not a failover: pinned plan stands
+        fs = q.submit_decode(spec, E1, cw, pattern_ref=lambda: (0,))
+        assert np.array_equal(fs.result(timeout=60), cw[list(E1)])
+        assert q.stats.failovers == 3  # only the three supersets above
+    finally:
+        q.close()
+
+
+class _GatedBackend(Backend):
+    """Host-matmul executor whose encode blocks on an event once `armed`
+    — makes the submit -> fail -> drain interleaving deterministic in
+    tests (the queue worker stalls on an encode group while later
+    requests pile up behind it)."""
+
+    def __init__(self, armed: bool = True):
+        self.armed = armed
+        self.entered = threading.Event()
+        self.release = threading.Event()
+
+    def encode(self, plan, x):
+        if self.armed:
+            self.entered.set()
+            assert self.release.wait(timeout=120)
+        return plan.field.matmul(plan.A.T, x)
+
+    def decode(self, plan, v):
+        return plan.field.matmul(plan.tables.D.T, v)
+
+
+def test_session_failover_end_to_end():
+    """fail() AFTER submit but BEFORE the worker drains: the session's
+    pattern_ref hands the queue the superset, deterministically forced by
+    blocking the worker on an earlier encode group."""
+    be = _GatedBackend(armed=False)
+    register_backend("gated", be)
+    try:
+        spec = _spec("rs", 8, 4)
+        system = CodedSystem(spec, backend="gated")
+        x = FERMAT.rand((8, 5), RNG)
+        cw = system.codeword(x)
+        system.fail((0,))
+        be.armed = True  # gate only the queue worker's encode group
+        f_block = system.submit("encode", x)    # occupies the worker
+        assert be.entered.wait(timeout=60)
+        poisoned = cw.copy()
+        poisoned[1] = (poisoned[1] + 7) % spec.q
+        f_dec = system.submit("decode", poisoned)   # pinned to (0,)
+        f_reb = system.submit("rebuild", poisoned)
+        system.fail(1)                          # invalidates both
+        be.release.set()
+        assert np.array_equal(f_block.result(timeout=60), cw[8:])
+        assert np.array_equal(f_dec.result(timeout=60), cw[[0]])
+        assert np.array_equal(f_reb.result(timeout=60), cw)
+        st = system.stats()
+        assert st["queue"].failovers == 2
+        system.close()
+    finally:
+        unregister_backend("gated")
+
+
+def test_churn_threads_rebuild_and_decode_futures_resolve():
+    """Concurrent fail/heal churn (disjoint position pools, total <= R)
+    racing queued submissions: every rebuild future must still resolve to
+    the exact full codeword, every decode future to correct rows."""
+    spec = _spec("rs", 8, 4)
+    system = CodedSystem(spec, backend="local")
+    x = FERMAT.rand((8, 31), RNG)
+    cw = system.codeword(x)
+    stop = threading.Event()
+    errors: list = []
+
+    def churn(pool):
+        rng = np.random.default_rng(pool[0])
+        try:
+            while not stop.is_set():
+                system.fail(int(rng.choice(pool)))
+                system.heal(int(rng.choice(pool)))
+        except Exception as exc:  # noqa: BLE001 — surface in main thread
+            errors.append(repr(exc))
+
+    threads = [threading.Thread(target=churn, args=(pool,))
+               for pool in ([2, 3], [9, 10])]
+    for t in threads:
+        t.start()
+    try:
+        futs = [system.submit("rebuild", cw) for _ in range(12)]
+        for fut in futs:
+            assert np.array_equal(fut.result(timeout=120), cw)
+    finally:
+        stop.set()
+        for t in threads:
+            t.join(timeout=60)
+    assert not errors, errors[:3]
+    system.close()
+
+
+# ---------------------------------------------------------------------------
+# stats()/describe() on undecodable patterns (bugfix)
+# ---------------------------------------------------------------------------
+
+def test_stats_and_describe_survive_undecodable_dft_pattern():
+    from repro.recover import UndecodableError
+
+    spec = _spec("dft", 8, 8)
+    system = CodedSystem(spec, backend="simulator")
+    x = FERMAT.rand((8, 2), RNG)
+    cw = system.codeword(x)
+    system.fail(DFT_UNDECODABLE)
+    with pytest.raises(UndecodableError):
+        system.decode_plan  # the pattern really is information-losing
+    st = system.stats()  # ...but introspection must not crash
+    assert st["decode"]["decodable"] is False
+    assert st["decode"]["erased"] == DFT_UNDECODABLE
+    text = system.describe()
+    assert "UNDECODABLE" in text
+    # reads still raise (correctly); heal restores everything
+    with pytest.raises(UndecodableError):
+        system.read(cw)
+    system.heal()
+    st = system.stats()
+    assert "decode" not in st
+    system.fail((5, 9))
+    system.read(cw)
+    assert system.stats()["decode"]["decodable"] is True
+
+
+# ---------------------------------------------------------------------------
+# CodingQueue.close() timeout (bugfix)
+# ---------------------------------------------------------------------------
+
+def test_queue_close_timeout_fails_pending_futures():
+    be = _GatedBackend()
+    register_backend("gated-close", be)
+    try:
+        spec = _spec("rs", 8, 4)
+        q = CodingQueue(backend="gated-close")
+        x = FERMAT.rand((8, 3), RNG)
+        f1 = q.submit_encode(spec, x)
+        assert be.entered.wait(timeout=60)
+        f2 = q.submit_encode(spec, x)  # queued behind the blocked group
+        with pytest.raises(RuntimeError, match="did not drain"):
+            q.close(timeout=0.2)
+        # the stranded futures are FAILED, not silently dangling
+        for f in (f1, f2):
+            with pytest.raises(RuntimeError, match="did not drain"):
+                f.result(timeout=1)
+        # new submissions are refused after the (attempted) close
+        with pytest.raises(RuntimeError, match="closed"):
+            q.submit_encode(spec, x)
+        be.release.set()
+    finally:
+        be.release.set()
+        unregister_backend("gated-close")
+
+
+def test_queue_close_clean_drain_still_resolves_everything():
+    spec = _spec("rs", 8, 4)
+    q = CodingQueue(backend="local")
+    x = FERMAT.rand((8, 3), RNG)
+    futs = [q.submit_encode(spec, x) for _ in range(5)]
+    q.close()
+    from repro.api import Encoder
+
+    expect = Encoder.plan(spec, backend="local").run(x)
+    for f in futs:
+        assert np.array_equal(f.result(timeout=1), expect)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint scrub: verify + rebuild in place off memmaps
+# ---------------------------------------------------------------------------
+
+def test_checkpoint_scrub_rebuilds_missing_and_corrupt(tmp_path):
+    import json
+
+    from repro.ckpt.checkpoint import CodedCheckpointer
+
+    state = {"w": np.arange(4096, dtype=np.float32).reshape(64, 64),
+             "b": np.ones(777, dtype=np.float32)}
+    ck = CodedCheckpointer(str(tmp_path), n_shards=8, n_parity=4)
+    ck.save(3, state)
+    d = tmp_path / "step_000003"
+    meta = json.loads((d / "meta.json").read_text())
+    assert len(meta["sha256"]) == 12  # every shard + parity is covered
+    assert ck.scrub(3)["rebuilt"] == []  # clean checkpoint: no-op
+    # one missing shard, one silently-corrupt shard, one corrupt parity
+    (d / "shard_002.npy").unlink()
+    for name in ("shard_005.npy", "parity_001.npy"):
+        arr = np.load(d / name)
+        arr[7] = (arr[7] + 1) % 65537
+        np.save(d / name, arr)
+    rep = ck.scrub()  # default: latest step
+    assert rep["missing"] == [2] and sorted(rep["corrupt"]) == [5, 9]
+    assert rep["rebuilt"] == [2, 5, 9] and rep["verified"]
+    # in-place rebuild is bitwise: files verify clean, restore round-trips
+    assert ck.scrub(3)["rebuilt"] == []
+    got = ck.restore(3, state)
+    assert np.array_equal(got["w"], state["w"])
+    assert np.array_equal(got["b"], state["b"])
+    # beyond R damaged files the scrub refuses loudly
+    for k in (0, 1, 3, 4, 6):
+        (d / f"shard_00{k}.npy").unlink()
+    with pytest.raises(RuntimeError, match="unrecoverable"):
+        ck.scrub(3)

@@ -51,8 +51,12 @@ def test_fail_blocks_sends_and_receives():
 
 def test_fail_rejects_out_of_range():
     net = RoundNetwork(4)
-    with pytest.raises(AssertionError):
+    with pytest.raises(ValueError, match=r"outside \[0, 4\)"):
         net.fail([4])
+    with pytest.raises(ValueError):
+        net.fail_at(2, [4])
+    with pytest.raises(ValueError):
+        net.fail_at(-1, [1])
 
 
 def test_encode_schedule_raises_on_failed_sink():
