@@ -1,7 +1,10 @@
 """Benchmark driver — one section per paper table/claim.
 
 Prints ``name,us_per_call,derived`` CSV; ``--json PATH`` additionally
-writes the machine-readable artifact.  Each JSON entry records the value
+writes the machine-readable artifact, stamped with the producing commit
+(``_meta.git_sha``) and a UTC timestamp so archived artifacts stay
+traceable.  Keys starting with ``_`` are metadata, never gated rows.
+Each JSON entry records the value
 AND the benchmark's shape parameters (parsed from the ``K16``/``R4``/
 ``E2``/``W4096``/``p1`` tokens of the row name plus any ``backend=`` in
 the derived column), so baselines stay comparable across edits::
@@ -38,6 +41,9 @@ Sections:
                    wall time + closed-form repair-schedule cost
   stream/*       — streamed vs single-shot plan execution + NTT fast path
                    vs dense local encode (benchmarks/stream_bench.py)
+  serve/*        — multi-tenant serving: closed/open-loop load over Zipf
+                   volumes, cross-session coalescing ratio, chaos-under-load
+                   correctness (benchmarks/serve_bench.py)
   mesh_encode/*  — lowered-HLO collective bytes, universal vs RS (subprocess)
   mesh_a2a/*     — mesh A2A scaling (subprocess)
   roofline/*     — dry-run roofline cells, if results/dryrun exists
@@ -52,6 +58,7 @@ import os
 import re
 import subprocess
 import sys
+from datetime import datetime, timezone
 from pathlib import Path
 
 _REPO = Path(__file__).resolve().parent.parent
@@ -60,6 +67,15 @@ sys.path.insert(0, str(_REPO))  # `benchmarks` namespace package, any cwd
 
 _PARAM_RE = re.compile(r"(?:^|_)([KRWEp])(\d+)(?=_|$|,)")
 _BACKEND_RE = re.compile(r"(?:^|;)backend=([a-zA-Z_]+)")
+
+
+def _git_sha() -> str:
+    try:
+        out = subprocess.run(["git", "rev-parse", "HEAD"], cwd=_REPO,
+                             capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or "unknown"
+    except Exception:  # noqa: BLE001 — artifact metadata must never fail a run
+        return "unknown"
 
 
 def _params_from(name: str, derived: str) -> dict:
@@ -98,7 +114,8 @@ def _check_baseline(acc: dict[str, dict], base: dict[str, dict],
     and therefore run UNGATED until the baseline is refreshed.
     """
     problems: list[str] = []
-    gated_sections = {n.split("/", 1)[0] for n in base}
+    gated_sections = {n.split("/", 1)[0] for n in base
+                      if not n.startswith("_")}
     warnings = [
         f"{name}: measured but not in the baseline — NOT gated (add it to "
         "the baseline, or restore the old row name)"
@@ -106,6 +123,8 @@ def _check_baseline(acc: dict[str, dict], base: dict[str, dict],
         if name not in base and name.split("/", 1)[0] in gated_sections
     ]
     for name, b in sorted(base.items()):
+        if name.startswith("_"):  # artifact metadata, not a gated row
+            continue
         section = name.split("/", 1)[0]
         if ran_sections is not None and section not in ran_sections:
             continue
@@ -159,7 +178,7 @@ def main() -> None:
 
     from benchmarks import (framework_costs, kernel_bench,
                             multireduce_compare, rebuild_bench, recover_bench,
-                            stream_bench, table1_costs)
+                            serve_bench, stream_bench, table1_costs)
 
     inproc = {
         "table1": table1_costs,
@@ -169,6 +188,7 @@ def main() -> None:
         "recover": recover_bench,
         "rebuild": rebuild_bench,
         "stream": stream_bench,
+        "serve": serve_bench,
     }
     subproc = {
         "mesh_encode": ("mesh_encode_bench.py", "mesh_encode/"),
@@ -224,7 +244,14 @@ def main() -> None:
                              "(run repro.launch.dryrun first)")
 
     if args.json:
-        Path(args.json).write_text(json.dumps(acc, indent=2, sort_keys=True))
+        artifact = dict(acc)
+        artifact["_meta"] = {
+            "git_sha": _git_sha(),
+            "timestamp": datetime.now(timezone.utc).isoformat(
+                timespec="seconds"),
+        }
+        Path(args.json).write_text(
+            json.dumps(artifact, indent=2, sort_keys=True))
         print(f"wrote {len(acc)} entries to {args.json}", file=sys.stderr)
     if failed:
         raise SystemExit(f"benchmark subprocesses failed: {failed}")

@@ -1,0 +1,428 @@
+"""Multi-tenant serving load generator: Zipf volumes, open/closed-loop
+arrivals, and chaos-under-load — the `serve/*` gated section.
+
+Drives `repro.launch.service.CodedService` the way a storage frontend is
+driven in production (ClusterDFS's `experiment_nettraff` methodology):
+many client threads, volume popularity Zipf-skewed so one hot volume
+dominates, every payload verified bitwise against the volume's known
+codeword.  Three legs:
+
+  serve/closed_*       — closed-loop: C clients submit-wait-repeat over V
+                         Zipf-ranked volumes (each volume its own
+                         generator matrix, so only same-volume requests
+                         may coalesce).  Rows: sustained QPS (gated
+                         ``better: higher``) and p50/p99/p999 completion
+                         latency.
+  serve/coalesce_hot_* — the hot volume's cross-session batching ratio
+                         (mean coalesced group size over its ops; gated
+                         ``min: 1.5`` — the acceptance criterion that the
+                         shared queue really merges independent sessions).
+  serve/open_*         — open-loop: seeded-exponential arrivals at a fixed
+                         offered rate, ``block=False`` admission (full
+                         queue => loud `QueueFullError`, counted, never a
+                         silent drop); p99 completion latency row.
+  serve/chaos_ok_*     — chaos UNDER load: processors killed/healed while
+                         thousands of queued ops are in flight across
+                         three tenants' sessions.  Every submitted future
+                         must resolve bitwise-correct or raise; the row's
+                         value is 1.0 only when there were ZERO silent
+                         drops and ZERO mismatches (gated ``min: 1``).
+
+Run standalone for bigger sweeps::
+
+    python benchmarks/serve_bench.py --ops 20000 --clients 32 --chaos
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import threading
+import time
+from pathlib import Path
+
+import numpy as np
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+from repro.api import CodeSpec, Encoder  # noqa: E402
+from repro.core.field import FERMAT  # noqa: E402
+from repro.launch.service import (  # noqa: E402
+    CodedService,
+    QueueFullError,
+    TenantQuota,
+)
+from repro.launch.tenancy import percentile  # noqa: E402
+
+
+def _zipf_probs(v: int, s: float = 1.1) -> np.ndarray:
+    p = 1.0 / np.arange(1, v + 1) ** s
+    return p / p.sum()
+
+
+def _make_volumes(n_vol: int, n_tenants: int, K: int, R: int, W: int,
+                  rng: np.random.Generator) -> list[dict]:
+    """One volume = (tenant, universal spec, its OWN generator matrix,
+    a fixed payload and its known codeword).  Distinct matrices mean
+    distinct plan digests: only same-volume requests may coalesce, so the
+    hot volume's batching ratio measures real popularity-driven merging."""
+    spec = CodeSpec(kind="universal", K=K, R=R, W=W)
+    vols = []
+    for v in range(n_vol):
+        A = FERMAT.rand((K, R), rng)
+        x = FERMAT.rand((K, W), rng)
+        plan = Encoder.plan(spec, backend="local", A=A)
+        parity = plan.run(x)
+        cw = np.concatenate([x % FERMAT.q, parity], axis=0)
+        vols.append({"name": f"vol{v}", "tenant": f"tenant{v % n_tenants}",
+                     "spec": spec, "A": A, "x": x, "cw": cw})
+    return vols
+
+
+# ---------------------------------------------------------------------------
+# closed loop
+# ---------------------------------------------------------------------------
+
+def closed_loop(*, n_clients: int = 12, ops_per_client: int = 80,
+                n_vol: int = 6, n_tenants: int = 4, K: int = 16, R: int = 4,
+                W: int = 256, seed: int = 7) -> dict:
+    rng = np.random.default_rng(seed)
+    vols = _make_volumes(n_vol, n_tenants, K, R, W, rng)
+    probs = _zipf_probs(n_vol)
+    svc = CodedService(backend="local", max_inflight_ops=4096, chunk_w=W)
+    try:
+        for v in vols:  # warm the per-volume plan + chunk callables
+            svc.submit(v["tenant"], v["spec"], "encode", v["x"],
+                       A=v["A"], tag=v["name"]).result(timeout=120)
+        errors: list[str] = []
+        barrier = threading.Barrier(n_clients + 1)
+
+        def client(cid: int) -> None:
+            r = np.random.default_rng(seed + 100 + cid)
+            try:
+                barrier.wait(timeout=60)
+                for i in range(ops_per_client):
+                    v = vols[int(r.choice(n_vol, p=probs))]
+                    fut = svc.submit(v["tenant"], v["spec"], "encode",
+                                     v["x"], A=v["A"], tag=v["name"])
+                    got = fut.result(timeout=120)
+                    if i % 10 == 0 and not np.array_equal(
+                            got, v["cw"][K:]):
+                        errors.append(f"client {cid}: bitwise mismatch "
+                                      f"on {v['name']}")
+            except Exception as exc:  # noqa: BLE001 — surfaced below
+                errors.append(f"client {cid}: {exc!r}")
+
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(n_clients)]
+        for t in threads:
+            t.start()
+        barrier.wait(timeout=60)
+        t0 = time.perf_counter()
+        for t in threads:
+            t.join()
+        wall = time.perf_counter() - t0
+        if errors:
+            raise RuntimeError(f"closed-loop errors: {errors[:4]}")
+        st = svc.stats()
+        lats = svc.latencies_us()
+        n_ops = n_clients * ops_per_client
+        return {
+            "qps": n_ops / wall,
+            "ops": n_ops,
+            "p50_us": percentile(lats, 0.5),
+            "p99_us": percentile(lats, 0.99),
+            "p999_us": percentile(lats, 0.999),
+            "hot_ratio": st["tags"]["vol0"]["coalescing_ratio"],
+            "service_ratio": st["service"]["coalescing_ratio"],
+            "K": K, "R": R, "W": W,
+        }
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# open loop
+# ---------------------------------------------------------------------------
+
+def open_loop(*, rate: float = 300.0, duration: float = 2.0,
+              n_vol: int = 6, n_tenants: int = 4, K: int = 16, R: int = 4,
+              W: int = 256, max_inflight: int = 256, seed: int = 13) -> dict:
+    """Seeded-exponential arrivals at `rate`/s for `duration`s; admission
+    is non-blocking — when the bounded queue is full the submission fails
+    LOUDLY with QueueFullError and is counted, never dropped."""
+    rng = np.random.default_rng(seed)
+    vols = _make_volumes(n_vol, n_tenants, K, R, W, rng)
+    probs = _zipf_probs(n_vol)
+    svc = CodedService(backend="local", max_inflight_ops=max_inflight,
+                       chunk_w=W)
+    try:
+        for v in vols:
+            svc.submit(v["tenant"], v["spec"], "encode", v["x"],
+                       A=v["A"]).result(timeout=120)
+        gaps = rng.exponential(1.0 / rate, size=int(rate * duration))
+        futs: list[tuple[dict, object]] = []
+        rejected = 0
+        t0 = time.perf_counter()
+        for gap in gaps:
+            v = vols[int(rng.choice(n_vol, p=probs))]
+            try:
+                futs.append((v, svc.submit(v["tenant"], v["spec"], "encode",
+                                           v["x"], A=v["A"], tag=v["name"],
+                                           block=False)))
+            except QueueFullError:
+                rejected += 1
+            time.sleep(gap)
+        for v, fut in futs:
+            got = fut.result(timeout=120)
+            if not np.array_equal(got, v["cw"][K:]):
+                raise RuntimeError(f"open-loop mismatch on {v['name']}")
+        wall = time.perf_counter() - t0
+        lats = svc.latencies_us()
+        return {
+            "offered_qps": rate,
+            "achieved_qps": len(futs) / wall,
+            "submitted": len(futs),
+            "rejected": rejected,
+            "p50_us": percentile(lats, 0.5),
+            "p99_us": percentile(lats, 0.99),
+            "K": K, "R": R, "W": W,
+        }
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# chaos under load
+# ---------------------------------------------------------------------------
+
+def chaos_under_load(*, n_ops: int = 2400, n_clients: int = 6,
+                     n_tenants: int = 3, K: int = 16, R: int = 4,
+                     W: int = 128, seed: int = 29) -> dict:
+    """Kill/heal processors while thousands of queued ops are in flight.
+
+    Clients submit WITHOUT waiting (deep queues), a chaos thread per
+    tenant's session randomly fails survivors / heals via rebuild while
+    the queue drains; decode submissions pin their pattern under a
+    per-session lock so every future has an exact expected value.  Every
+    future must resolve bitwise-correct or raise — both are counted; a
+    future that does neither is a silent drop and fails the row.
+    """
+    rng = np.random.default_rng(seed)
+    spec = CodeSpec(kind="rs", K=K, R=R, W=W)
+    svc = CodedService(backend="local", max_inflight_ops=8192, chunk_w=1024)
+    tenants = []
+    try:
+        for t in range(n_tenants):
+            name = f"tenant{t}"
+            # default per-tenant quota (64) would backpressure the flood at
+            # 3*64 in flight; chaos wants a genuinely deep queue
+            svc.set_quota(name, TenantQuota(max_inflight_ops=4096,
+                                            max_inflight_bytes=1 << 33))
+            x = FERMAT.rand((K, W), rng)
+            sess = svc.session(name, spec)
+            cw = sess.codeword(x)
+            tenants.append({"name": name, "sess": sess, "x": x, "cw": cw,
+                            "lock": threading.Lock()})
+        svc.submit("tenant0", spec, "encode", tenants[0]["x"]).result(
+            timeout=120)  # warm the chunk callables
+
+        futs: list[tuple[str, tuple | None, dict, object]] = []
+        futs_lock = threading.Lock()
+        stop_chaos = threading.Event()
+        submit_errors: list[str] = []
+
+        def chaos(tn: dict, cseed: int) -> None:
+            # mostly cheap fail/heal churn (every pattern change forces the
+            # queue's pinned-pattern failover / replan machinery); the
+            # occasional SYNCHRONOUS rebuild heals mid-load, racing the
+            # queued decodes it invalidates.  Sleeps keep the session lock
+            # mostly free so the clients can actually flood the queue.
+            r = np.random.default_rng(cseed)
+            sess = tn["sess"]
+            while not stop_chaos.is_set():
+                roll = r.random()
+                with tn["lock"]:
+                    try:
+                        if roll < 0.5 and len(sess.failed) < R:
+                            alive = [i for i in range(spec.N)
+                                     if i not in sess.failed]
+                            sess.fail(int(r.choice(alive)))
+                        elif roll < 0.54 and sess.failed:
+                            healed = sess.rebuild(tn["cw"])
+                            assert np.array_equal(healed, tn["cw"])
+                        elif sess.failed:
+                            sess.heal(int(r.choice(list(sess.failed))))
+                    except ValueError:
+                        pass  # lost the <=R race to a concurrent client
+                time.sleep(0.02)
+
+        def client(cid: int) -> None:
+            r = np.random.default_rng(seed + 1000 + cid)
+            try:
+                for _ in range(n_ops // n_clients):
+                    tn = tenants[int(r.integers(n_tenants))]
+                    roll = r.random()
+                    if roll < 0.6:
+                        fut = svc.submit(tn["name"], spec, "encode", tn["x"])
+                        rec = ("encode", None, tn, fut)
+                    elif roll < 0.85:
+                        # pin the expected pattern under the session lock:
+                        # chaos cannot move it between read and submit
+                        with tn["lock"]:
+                            pinned = tn["sess"].failed
+                            fut = svc.submit(tn["name"], spec, "decode",
+                                             tn["cw"])
+                        rec = ("decode", pinned, tn, fut)
+                    else:
+                        fut = svc.submit(tn["name"], spec, "rebuild",
+                                         tn["cw"])
+                        rec = ("rebuild", None, tn, fut)
+                    with futs_lock:
+                        futs.append(rec)
+            except Exception as exc:  # noqa: BLE001 — loud, counted
+                submit_errors.append(f"client {cid}: {exc!r}")
+
+        peak = {"depth": 0}
+
+        def sampler() -> None:
+            while not stop_chaos.is_set():
+                peak["depth"] = max(peak["depth"], svc.queue_depth)
+                time.sleep(0.001)
+
+        chaos_threads = [
+            threading.Thread(target=chaos, args=(tn, seed + 7 * i), daemon=True)
+            for i, tn in enumerate(tenants)]
+        sample_thread = threading.Thread(target=sampler, daemon=True)
+        client_threads = [threading.Thread(target=client, args=(c,))
+                          for c in range(n_clients)]
+        t0 = time.perf_counter()
+        for t in chaos_threads + client_threads + [sample_thread]:
+            t.start()
+        for t in client_threads:
+            t.join()
+
+        ok = loud = mismatch = unresolved = 0
+        for op, pinned, tn, fut in futs:
+            try:
+                got = fut.result(timeout=300)
+            except Exception:  # noqa: BLE001 — a LOUD failure, counted
+                loud += 1
+                continue
+            cw = tn["cw"]
+            ref = (cw[K:] if op == "encode"
+                   else cw[list(pinned)] if op == "decode" else cw)
+            if np.array_equal(got, ref):
+                ok += 1
+            else:
+                mismatch += 1
+        wall = time.perf_counter() - t0
+        stop_chaos.set()
+        for t in chaos_threads:
+            t.join(timeout=30)
+        st = svc.stats()
+        unresolved = sum(1 for _, _, _, f in futs if not f.done())
+        return {
+            "submitted": len(futs),
+            "ok": ok,
+            "loud_failures": loud,
+            "mismatches": mismatch,
+            "unresolved": unresolved,
+            "submit_errors": len(submit_errors),
+            "failovers": st["service"]["failovers"],
+            "peak_depth": peak["depth"],
+            "qps": len(futs) / wall,
+            "all_accounted": (mismatch == 0 and unresolved == 0
+                              and len(futs) + len(submit_errors)
+                              == ok + loud + len(submit_errors)),
+            "K": K, "R": R, "W": W,
+        }
+    finally:
+        svc.close(timeout=300)
+
+
+# ---------------------------------------------------------------------------
+# gated rows
+# ---------------------------------------------------------------------------
+
+def rows() -> list[str]:
+    out = []
+
+    c = closed_loop()
+    shape = f"K{c['K']}_R{c['R']}_W{c['W']}"
+    out.append(f"serve/closed_qps_{shape},{c['qps']:.1f},"
+               f"backend=local;dimensionless=1;ops={c['ops']};"
+               f"service_ratio={c['service_ratio']:.2f}")
+    out.append(f"serve/closed_lat50_us_{shape},{c['p50_us']:.0f},"
+               f"backend=local;qps={c['qps']:.1f}")
+    out.append(f"serve/closed_lat99_us_{shape},{c['p99_us']:.0f},"
+               f"backend=local;qps={c['qps']:.1f}")
+    out.append(f"serve/closed_lat999_us_{shape},{c['p999_us']:.0f},"
+               f"backend=local;qps={c['qps']:.1f}")
+    out.append(f"serve/coalesce_hot_{shape},{c['hot_ratio']:.2f},"
+               f"backend=local;dimensionless=1;"
+               f"service_ratio={c['service_ratio']:.2f}")
+
+    o = open_loop()
+    oshape = f"K{o['K']}_R{o['R']}_W{o['W']}"
+    out.append(f"serve/open_lat99_us_{oshape},{o['p99_us']:.0f},"
+               f"backend=local;offered_qps={o['offered_qps']:.0f};"
+               f"achieved_qps={o['achieved_qps']:.1f};"
+               f"rejected={o['rejected']}")
+
+    ch = chaos_under_load()
+    cshape = f"K{ch['K']}_R{ch['R']}_W{ch['W']}"
+    out.append(f"serve/chaos_ok_{cshape},"
+               f"{1.0 if ch['all_accounted'] else 0.0:.1f},"
+               f"backend=local;dimensionless=1;submitted={ch['submitted']};"
+               f"ok={ch['ok']};loud={ch['loud_failures']};"
+               f"mismatch={ch['mismatches']};unresolved={ch['unresolved']};"
+               f"failovers={ch['failovers']};peak_depth={ch['peak_depth']};"
+               f"qps={ch['qps']:.0f}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--clients", type=int, default=12)
+    ap.add_argument("--ops", type=int, default=960,
+                    help="total closed-loop ops across all clients")
+    ap.add_argument("--volumes", type=int, default=6)
+    ap.add_argument("--tenants", type=int, default=4)
+    ap.add_argument("--rate", type=float, default=300.0,
+                    help="open-loop offered arrival rate (QPS)")
+    ap.add_argument("--duration", type=float, default=2.0)
+    ap.add_argument("--chaos", action="store_true",
+                    help="also run the chaos-under-load leg")
+    ap.add_argument("--chaos-ops", type=int, default=2400)
+    ap.add_argument("--seed", type=int, default=7)
+    args = ap.parse_args()
+
+    c = closed_loop(n_clients=args.clients,
+                    ops_per_client=max(1, args.ops // args.clients),
+                    n_vol=args.volumes, n_tenants=args.tenants,
+                    seed=args.seed)
+    print(f"closed-loop: {c['ops']} ops @ {c['qps']:.0f} QPS sustained; "
+          f"p50={c['p50_us']:.0f}us p99={c['p99_us']:.0f}us "
+          f"p999={c['p999_us']:.0f}us; hot-volume coalescing "
+          f"{c['hot_ratio']:.2f}x (service {c['service_ratio']:.2f}x)")
+    o = open_loop(rate=args.rate, duration=args.duration,
+                  n_vol=args.volumes, n_tenants=args.tenants,
+                  seed=args.seed + 1)
+    print(f"open-loop  : offered {o['offered_qps']:.0f} QPS, achieved "
+          f"{o['achieved_qps']:.0f}; {o['submitted']} admitted, "
+          f"{o['rejected']} rejected LOUDLY; p99={o['p99_us']:.0f}us")
+    if args.chaos:
+        ch = chaos_under_load(n_ops=args.chaos_ops, seed=args.seed + 2)
+        print(f"chaos      : {ch['submitted']} ops under live kills "
+              f"(peak queue depth {ch['peak_depth']}, "
+              f"{ch['failovers']} failovers): {ch['ok']} bitwise-ok, "
+              f"{ch['loud_failures']} loud failures, "
+              f"{ch['mismatches']} mismatches, "
+              f"{ch['unresolved']} silent drops -> "
+              f"{'PASS' if ch['all_accounted'] else 'FAIL'}")
+        if not ch["all_accounted"]:
+            raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

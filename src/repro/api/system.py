@@ -84,16 +84,30 @@ class CodedSystem:
     A       : explicit generator block (kind="universal"/"lagrange")
     link    : `LinkModel` for cost reporting
     chunk_w : default streaming chunk width for `*_stream`/queue paths
+    queue   : an externally-owned `CodingQueue` to route `submit` futures
+              through instead of a lazily-opened private one.  This is the
+              pool-safe lifecycle `launch.service.CodedService` uses: many
+              pooled sessions share ONE queue, so same-plan requests from
+              different sessions coalesce into one batched execution, and
+              `close()` never closes a queue the session does not own.
+              Must be on the same backend as the session.
     """
 
     def __init__(self, spec: CodeSpec, backend: str = "simulator", *,
                  method: str = "auto", A: np.ndarray | None = None,
-                 link: LinkModel | None = None, chunk_w: int | None = None):
+                 link: LinkModel | None = None, chunk_w: int | None = None,
+                 queue: Any = None):
         self.spec = spec
         self.backend = backend
         self.link = link or LinkModel()
         self.chunk_w = chunk_w
         self._A = A
+        if queue is not None and queue.backend != backend:
+            raise ValueError(
+                f"shared queue runs backend {queue.backend!r} but the "
+                f"session was opened on {backend!r} — a queued submission "
+                "would silently execute on the wrong backend")
+        self._shared_queue = queue
         # eager plan: all capability checks + host-table builds happen now
         self._enc: EncodePlan = Encoder.plan(spec, backend=backend,
                                              method=method, A=A)
@@ -375,6 +389,8 @@ class CodedSystem:
 
     # -- batched submission (coding queue) ----------------------------------
     def _ensure_queue(self):
+        if self._shared_queue is not None:
+            return self._shared_queue
         with self._lock:
             if self._queue is None:
                 from ..launch.coding_queue import CodingQueue
@@ -383,7 +399,7 @@ class CodedSystem:
                                           chunk_w=self.chunk_w)
             return self._queue
 
-    def submit(self, op: str, payload):
+    def submit(self, op: str, payload, *, meta=None):
         """Submit an "encode", "decode", or "rebuild" request; returns a
         `concurrent.futures.Future`.  Requests are coalesced with other
         in-flight submissions sharing the same plan into single batched
@@ -404,7 +420,7 @@ class CodedSystem:
         invalidated fails its future rather than decode stale rows."""
         if op == "encode":
             return self._ensure_queue().submit_encode(self.spec, payload,
-                                                      A=self._A)
+                                                      A=self._A, meta=meta)
         if op in ("decode", "rebuild"):
             plan = self.decode_plan  # pin ONE pattern for slice + queue
             v = np.asarray(payload)
@@ -420,7 +436,7 @@ class CodedSystem:
             submit = (queue.submit_decode if op == "decode"
                       else queue.submit_rebuild)
             return submit(self.spec, plan.erased, v, A=self._A,
-                          pattern_ref=self._live_pattern)
+                          pattern_ref=self._live_pattern, meta=meta)
         raise ValueError(
             f"op must be 'encode', 'decode' or 'rebuild', got {op!r}")
 
@@ -441,9 +457,12 @@ class CodedSystem:
 
     # -- lifecycle / introspection ------------------------------------------
     def close(self) -> None:
-        """Drain and stop the coding queue (no-op if never started).  The
-        session stays usable — a later `submit` lazily opens a fresh
-        queue; direct `encode`/`read`/... never involve the queue."""
+        """Drain and stop the session's OWN coding queue (no-op if never
+        started).  A shared queue handed in at construction is left
+        running — it belongs to the pool (`CodedService`) that created it,
+        and other sessions are still submitting through it.  The session
+        stays usable — a later `submit` lazily opens a fresh queue; direct
+        `encode`/`read`/... never involve the queue."""
         with self._lock:
             queue, self._queue = self._queue, None
         if queue is not None:
@@ -492,12 +511,14 @@ class CodedSystem:
                     "last": plan.last_stats,
                 }
         with self._lock:
-            if self._queue is not None:
+            q = self._shared_queue or self._queue
+            if q is not None:
                 # snapshot, not the live object: the worker thread keeps
-                # mutating QueueStats after this call returns
+                # mutating QueueStats after this call returns (a shared
+                # queue's stats are pool-wide, not session-scoped)
                 from ..launch.coding_queue import QueueStats
 
-                live = self._queue.stats
+                live = q.stats
                 out["queue"] = QueueStats(live.requests, live.batches,
                                           list(live.coalesced),
                                           live.failovers)

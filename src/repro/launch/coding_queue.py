@@ -61,6 +61,8 @@ class _Request:
     digest: str | None = None  # A digest (part of the group key)
     pattern_ref: Callable | None = None  # live-pattern getter (failover)
     effective: tuple | None = None       # pattern resolved at drain time
+    meta: Any = None           # opaque caller tag, echoed to the observer
+    group_n: int = 1           # size of the coalesced group it executed in
 
 
 @dataclass
@@ -79,7 +81,8 @@ class CodingQueue:
     """Coalescing encode/decode/rebuild front-end over the plan caches."""
 
     def __init__(self, backend: str = "local", *,
-                 chunk_w: int | None = None, max_batch_w: int = 1 << 16):
+                 chunk_w: int | None = None, max_batch_w: int = 1 << 16,
+                 observer: Callable | None = None):
         # finish jax's (heavily circular) first import on THIS thread:
         # letting the worker and concurrent clients race it can observe a
         # partially initialized jax.numpy (py3.10 import lock granularity)
@@ -88,6 +91,11 @@ class CodingQueue:
         self.backend = backend
         self.chunk_w = chunk_w
         self.max_batch_w = max_batch_w
+        # observer(meta, op, group_n, failover) is called on the worker
+        # thread as each request resolves (only for requests submitted
+        # with a meta tag) — the service layer's per-tenant observability
+        # hook; observer exceptions are swallowed, never fail a future
+        self.observer = observer
         self.stats = QueueStats()
         self._q: "queue.Queue[_Request | None]" = queue.Queue()
         self._closing = False
@@ -97,7 +105,7 @@ class CodingQueue:
         self._worker.start()
 
     # -- client side --------------------------------------------------------
-    def submit_encode(self, spec, x, A=None) -> Future:
+    def submit_encode(self, spec, x, A=None, meta=None) -> Future:
         """Encode payload x (K,)/(K, W) under `spec`; Future of sinks.
         `A` is the explicit generator block for kind="universal"/"lagrange"
         specs that carry one (same contract as `Encoder.plan`); its digest
@@ -106,10 +114,10 @@ class CodingQueue:
         from ..api.planner import _digest
 
         return self._submit(_Request("encode", spec, None, A, np.asarray(x),
-                                     Future(), digest=_digest(A)))
+                                     Future(), digest=_digest(A), meta=meta))
 
     def submit_decode(self, spec, erased, v, A=None,
-                      pattern_ref=None) -> Future:
+                      pattern_ref=None, meta=None) -> Future:
         """Repair `erased` from v; Future of the erased symbols (rows
         ordered like the pinned pattern).  `v` carries either the K kept
         survivor rows (classic) or the full (N, W) codeword — the worker
@@ -121,10 +129,10 @@ class CodingQueue:
         return self._submit(_Request("decode", spec, erased, A,
                                      np.asarray(v), Future(),
                                      digest=_digest(A),
-                                     pattern_ref=pattern_ref))
+                                     pattern_ref=pattern_ref, meta=meta))
 
     def submit_rebuild(self, spec, erased, cw, A=None,
-                       pattern_ref=None) -> Future:
+                       pattern_ref=None, meta=None) -> Future:
         """Re-materialize the full codeword: Future of the healed (N, W)
         with every position of the (possibly failed-over) pattern
         recomputed.  `cw` must carry the full N codeword rows."""
@@ -138,32 +146,48 @@ class CodingQueue:
                 f"rows, got leading dim {cw.shape[0]}")
         return self._submit(_Request("rebuild", spec, erased, A, cw,
                                      Future(), digest=_digest(A),
-                                     pattern_ref=pattern_ref))
+                                     pattern_ref=pattern_ref, meta=meta))
 
     def _submit(self, req: _Request) -> Future:
-        if self._closing or self._worker is None:
-            raise RuntimeError("queue is closed")
+        # the closed check, pending registration and enqueue are ONE
+        # critical section with close()'s sentinel put: a submit serialized
+        # before close lands ahead of the sentinel (the worker drains it),
+        # a submit serialized after raises — a late request can never slip
+        # in behind the worker's final drain and hang its future
         with self._plock:
+            if self._closing or self._worker is None:
+                raise RuntimeError("queue is closed")
             self._pending.add(req.future)
-        self._q.put(req)
+            self._q.put(req)
         return req.future
+
+    @property
+    def depth(self) -> int:
+        """Requests accepted but not yet resolved (queued or executing)."""
+        with self._plock:
+            return len(self._pending)
 
     def close(self, timeout: float | None = 30.0) -> None:
         """Drain outstanding requests and stop the worker.
 
-        The worker processes everything still queued (even a request that
-        raced past `_submit`'s closed check) before exiting, so no
-        accepted Future is left unresolved.  If the worker does NOT drain
+        The worker processes everything still queued before exiting, so no
+        accepted Future is left unresolved; the submit/close boundary is
+        locked, so a submit racing with close either lands ahead of the
+        shutdown sentinel (and resolves) or deterministically raises
+        ``RuntimeError("queue is closed")``.  If the worker does NOT drain
         within `timeout`, every still-pending Future is failed with a
         `RuntimeError` and the same error is raised here — a timed-out
         close is loud, never a silent return with live futures dangling.
         """
-        if self._worker is None:
-            return
-        self._closing = True
-        self._q.put(None)
-        self._worker.join(timeout=timeout)
-        if self._worker.is_alive():
+        with self._plock:
+            worker = self._worker
+            if worker is None:
+                return
+            if not self._closing:
+                self._closing = True
+                self._q.put(None)
+        worker.join(timeout=timeout)
+        if worker.is_alive():
             with self._plock:
                 stranded = [f for f in self._pending if not f.done()]
                 self._pending.clear()
@@ -194,6 +218,15 @@ class CodingQueue:
                 batch.append(nxt)
 
     def _resolve(self, req: _Request, *, result=None, exc=None) -> None:
+        if self.observer is not None and req.meta is not None:
+            # BEFORE the future resolves: a client unblocked by result()
+            # must already see this op in the observer-fed stats
+            failover = (req.op != "encode" and req.effective is not None
+                        and req.effective != req.erased)
+            try:
+                self.observer(req.meta, req.op, req.group_n, failover)
+            except Exception:  # noqa: BLE001 — observability never fails ops
+                pass
         if not req.future.done():
             if exc is not None:
                 req.future.set_exception(exc)
@@ -280,6 +313,8 @@ class CodingQueue:
 
         self.stats.batches += 1
         self.stats.coalesced.append(len(reqs))
+        for req in reqs:
+            req.group_n = len(reqs)
         try:
             r0 = reqs[0]
             if r0.op == "encode":

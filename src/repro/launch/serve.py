@@ -20,14 +20,21 @@ worker threads, coalesced into streamed `run_batched` plan executions
 (`launch.coding_queue.CodingQueue` underneath), and every result is
 verified bitwise against a direct per-request `plan.run`.
 
+`--service N` is the multi-tenant layer (`launch.service.CodedService`):
+two tenants drive pooled sessions through one shared coding queue from
+concurrent clients — their same-plan encodes coalesce ACROSS sessions —
+one tenant runs a degraded read mid-run, and the per-tenant serving stats
+(admission, coalescing ratio, latency percentiles) are printed.
+
 `--chaos R,SEED` is the failure-injection scenario: first a mid-schedule
 leg (a `FaultInjector` kills up to R processors at random rounds of a
 running repair schedule; `repair_with_faults` restarts against each
 enlarged erasure set with exact C1/C2 accounting), then a serving leg
 (random `fail()`s race queued encode/decode/rebuild submissions through
-one `CodedSystem`, exercising the queue's superset failover), and finally
-a full `rebuild` back to health — every result self-checked bitwise
-against the original codeword."""
+one `CodedSystem`, exercising the queue's superset failover), then chaos
+UNDER multi-tenant load (kills racing two tenants' queued submissions
+through a `CodedService`), and finally a full `rebuild` back to health —
+every result self-checked bitwise against the original codeword."""
 from __future__ import annotations
 
 import argparse
@@ -95,6 +102,91 @@ def _chaos_demo(max_kills: int, seed: int, n_shards: int,
           f"{len(stats['failed'])} live failures "
           f"({qs.failovers if qs else 0} superset failover(s)); "
           "rebuild -> healed, all bitwise")
+
+    # -- leg 3: chaos UNDER multi-tenant service load ---------------------
+    from .service import CodedService
+
+    with CodedService(backend="local") as svc:
+        tens = []
+        for t in range(2):
+            name = f"tenant{t}"
+            xt = FERMAT.rand((n_shards, 64), rng)
+            sess = svc.session(name, spec)
+            tens.append((name, sess, xt, sess.codeword(xt)))
+        sfuts = []
+        for _ in range(12 * max_kills):
+            name, sess, xt, cwt = tens[int(rng.integers(2))]
+            roll = rng.random()
+            if roll < 0.3 and len(sess.failed) < n_parity:
+                alive = [i for i in range(spec.N) if i not in sess.failed]
+                sess.fail(int(rng.choice(alive)))
+            elif roll < 0.6:
+                sfuts.append(("encode", None, cwt,
+                              svc.submit(name, spec, "encode", xt)))
+            elif roll < 0.85:
+                sfuts.append(("decode", sess.failed, cwt,
+                              svc.submit(name, spec, "decode", cwt)))
+            else:
+                sfuts.append(("rebuild", None, cwt,
+                              svc.submit(name, spec, "rebuild", cwt)))
+        for op, pinned, cwt, fut in sfuts:
+            got = fut.result(timeout=120)
+            ref = (cwt[n_shards:] if op == "encode"
+                   else cwt[list(pinned)] if op == "decode" else cwt)
+            assert np.array_equal(got, ref), f"service {op} self-check"
+        sstats = svc.stats()["service"]
+        print(f"chaos service OK: {len(sfuts)} ops across 2 tenants' "
+              f"sessions under live kills (coalescing "
+              f"{sstats['coalescing_ratio']:.2f}x, "
+              f"{sstats['failovers']} failover(s)), all bitwise")
+
+
+def _service_demo(n_requests: int, n_shards: int, n_parity: int) -> None:
+    """Multi-tenant serving demo: two tenants drive one `CodedService`
+    from concurrent clients — same spec, so their encodes coalesce across
+    sessions — one tenant degraded mid-run; everything verified bitwise
+    and the per-tenant serving stats printed (`service.describe()`)."""
+    import threading
+
+    import numpy as np
+
+    from ..api import CodedSystem, CodeSpec
+    from ..core.field import FERMAT
+    from .service import CodedService, TenantQuota
+
+    spec = CodeSpec(kind="rs", K=n_shards, R=n_parity)
+    ref = CodedSystem(spec, backend="local")
+    with CodedService(backend="local") as svc:
+        svc.set_quota("acme", TenantQuota(max_inflight_ops=32, weight=2.0))
+        futs: list[tuple[np.ndarray, object]] = []
+        lock = threading.Lock()
+
+        def client(tenant: str, seed: int) -> None:
+            r = np.random.default_rng(seed)
+            for _ in range(n_requests):
+                x = FERMAT.rand((n_shards, 64), r)
+                f = svc.submit(tenant, spec, "encode", x, tag=f"{tenant}/v0")
+                with lock:
+                    futs.append((ref.codeword(x)[n_shards:], f))
+
+        threads = [threading.Thread(target=client, args=(t, 50 + i))
+                   for i, t in enumerate(["acme", "zeta"])]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        for want, fut in futs:
+            assert np.array_equal(fut.result(timeout=120), want), \
+                "service encode self-check failed"
+        # one tenant degrades; its decode rides the same shared queue
+        x = FERMAT.rand((n_shards, 64), np.random.default_rng(99))
+        cw = ref.codeword(x)
+        svc.session("zeta", spec).fail(range(n_parity))
+        got = svc.submit("zeta", spec, "decode", cw).result(timeout=120)
+        assert np.array_equal(got, cw[: n_parity]), "degraded read failed"
+        print(svc.describe())
+        print(f"service demo OK: {len(futs)} encodes from 2 tenants + 1 "
+              "degraded read, all bitwise")
 
 
 def _queue_demo(n_requests: int, n_shards: int, n_parity: int) -> None:
@@ -205,6 +297,10 @@ def main():
     ap.add_argument("--queue-demo", type=int, default=0, metavar="N",
                     help="drive the batched coding queue with N concurrent "
                          "encode+decode clients and verify bitwise")
+    ap.add_argument("--service", type=int, default=0, metavar="N",
+                    help="multi-tenant CodedService demo: two tenants x N "
+                         "coalescing encodes + a degraded read, verified "
+                         "bitwise, per-tenant stats printed")
     ap.add_argument("--chaos", default=None, metavar="R,SEED",
                     help="failure-injection scenario: kill up to R "
                          "processors at random rounds while serving queued "
@@ -220,6 +316,8 @@ def main():
         _chaos_demo(kills, seed, args.coded_shards, args.coded_parity)
     if args.queue_demo:
         _queue_demo(args.queue_demo, args.coded_shards, args.coded_parity)
+    if args.service:
+        _service_demo(args.service, args.coded_shards, args.coded_parity)
 
     import jax
     import jax.numpy as jnp

@@ -51,6 +51,17 @@ def test_measured_row_without_baseline_entry_warns():
     assert "NOT gated" in warnings[0]
 
 
+def test_meta_keys_are_not_gated_rows():
+    """``_``-prefixed keys (the ``_meta`` git-sha/timestamp stamp in the
+    JSON artifact) are metadata: a baseline carrying one must neither fail
+    the gate as "not measured" nor gate any measured row."""
+    base = {"stream/a_K16": _entry(100.0),
+            "_meta": {"git_sha": "abc123", "timestamp": "2026-01-01"}}
+    acc = {"stream/a_K16": _entry(100.0)}
+    problems, warnings = _check_baseline(acc, base, 0.25, None)
+    assert problems == [] and warnings == []
+
+
 def test_sections_filter_skips_unran_baseline_entries():
     base = {"stream/a_K16": _entry(100.0), "recover/b_K16": _entry(50.0)}
     acc = {"stream/a_K16": _entry(100.0)}
