@@ -46,7 +46,10 @@ Sections:
                    correctness (benchmarks/serve_bench.py)
   mesh_encode/*  — lowered-HLO collective bytes, universal vs RS (subprocess)
   mesh_a2a/*     — mesh A2A scaling (subprocess)
-  roofline/*     — dry-run roofline cells, if results/dryrun exists
+  roofline/*     — coding-kernel fraction-of-roofline cells (NTT + dense
+                   local encode vs the host's memcpy ceiling, fed by the
+                   metrics registry) + dry-run cells if results/dryrun
+                   exists
 
 ``--sections table1 recover ...`` restricts the run to the named sections.
 """
@@ -232,16 +235,15 @@ def main() -> None:
             failed.append(name)
 
     if on("roofline"):
-        if (_REPO / "results" / "dryrun").exists():
-            from benchmarks import roofline
+        from benchmarks import roofline
 
+        # coding-kernel cells run anywhere (local backend, metrics-fed);
+        # dry-run cells ride along only when their artifacts exist
+        for row in roofline.coding_rows():
+            _emit(row, acc)
+        if (_REPO / "results" / "dryrun").exists():
             for row in roofline.rows():
                 _emit(row, acc)
-        elif wanted is not None:
-            # explicitly requested but unrunnable: fail loudly, don't write
-            # an empty artifact
-            raise SystemExit("--sections roofline needs results/dryrun "
-                             "(run repro.launch.dryrun first)")
 
     if args.json:
         artifact = dict(acc)

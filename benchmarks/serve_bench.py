@@ -197,7 +197,8 @@ def open_loop(*, rate: float = 300.0, duration: float = 2.0,
 
 def chaos_under_load(*, n_ops: int = 2400, n_clients: int = 6,
                      n_tenants: int = 3, K: int = 16, R: int = 4,
-                     W: int = 128, seed: int = 29) -> dict:
+                     W: int = 128, seed: int = 29,
+                     trace_path: str | None = None) -> dict:
     """Kill/heal processors while thousands of queued ops are in flight.
 
     Clients submit WITHOUT waiting (deep queues), a chaos thread per
@@ -206,10 +207,16 @@ def chaos_under_load(*, n_ops: int = 2400, n_clients: int = 6,
     per-session lock so every future has an exact expected value.  Every
     future must resolve bitwise-correct or raise — both are counted; a
     future that does neither is a silent drop and fails the row.
+
+    With `trace_path`, the whole scenario is captured as a Chrome
+    trace-event timeline (per-tenant op spans, queue execution, stream
+    pipeline) plus one simulator-backed fail->decode leg under the same
+    tracer, so the artifact also carries per-processor round tracks.
     """
     rng = np.random.default_rng(seed)
     spec = CodeSpec(kind="rs", K=K, R=R, W=W)
-    svc = CodedService(backend="local", max_inflight_ops=8192, chunk_w=1024)
+    svc = CodedService(backend="local", max_inflight_ops=8192, chunk_w=1024,
+                       trace=trace_path)
     tenants = []
     try:
         for t in range(n_tenants):
@@ -321,6 +328,17 @@ def chaos_under_load(*, n_ops: int = 2400, n_clients: int = 6,
             t.join(timeout=30)
         st = svc.stats()
         unresolved = sum(1 for _, _, _, f in futs if not f.done())
+        if svc.tracer is not None:
+            # the chaos load serves on the local backend, which has no
+            # lockstep rounds; a small simulator-backed fail -> decode leg
+            # under the SAME (still-installed) tracer puts per-processor
+            # round tracks into the artifact alongside the op spans
+            from repro.api import CodedSystem
+
+            with CodedSystem(spec, backend="simulator") as sim:
+                sim.fail([1, K + 1])
+                rep = sim.decode(tenants[0]["cw"])
+                assert np.array_equal(rep, tenants[0]["cw"][[1, K + 1]])
         return {
             "submitted": len(futs),
             "ok": ok,
@@ -394,6 +412,9 @@ def main() -> None:
     ap.add_argument("--chaos", action="store_true",
                     help="also run the chaos-under-load leg")
     ap.add_argument("--chaos-ops", type=int, default=2400)
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="write the chaos leg's Chrome trace-event JSON "
+                         "here (implies --chaos)")
     ap.add_argument("--seed", type=int, default=7)
     args = ap.parse_args()
 
@@ -411,8 +432,11 @@ def main() -> None:
     print(f"open-loop  : offered {o['offered_qps']:.0f} QPS, achieved "
           f"{o['achieved_qps']:.0f}; {o['submitted']} admitted, "
           f"{o['rejected']} rejected LOUDLY; p99={o['p99_us']:.0f}us")
-    if args.chaos:
-        ch = chaos_under_load(n_ops=args.chaos_ops, seed=args.seed + 2)
+    if args.chaos or args.trace:
+        ch = chaos_under_load(n_ops=args.chaos_ops, seed=args.seed + 2,
+                              trace_path=args.trace)
+        if args.trace:
+            print(f"trace      : chaos timeline -> {args.trace}")
         print(f"chaos      : {ch['submitted']} ops under live kills "
               f"(peak queue depth {ch['peak_depth']}, "
               f"{ch['failovers']} failovers): {ch['ok']} bitwise-ok, "

@@ -24,6 +24,7 @@ from ..core.dft_a2a import dft_a2a
 from ..core.field import FERMAT_Q
 from ..core.framework import decentralized_encode
 from ..core.simulator import RoundNetwork
+from ..obs.trace import kernel_span
 from .registry import Backend, BackendCapabilityError, register_backend
 
 
@@ -83,7 +84,10 @@ def run_local(plan, x: np.ndarray) -> np.ndarray:
     import jax.numpy as jnp
 
     x32 = jnp.asarray(np.asarray(x) % plan.field.q, jnp.uint32)
-    y = local_encode_callable(plan)(x32)
+    with kernel_span(f"local_encode.{plan.local_impl}",
+                     kind=plan.spec.kind, K=plan.spec.K,
+                     w=int(x32.shape[1])):
+        y = local_encode_callable(plan)(x32)
     return np.asarray(y, np.int64)
 
 
@@ -148,8 +152,10 @@ def run_mesh(plan, x: np.ndarray) -> np.ndarray:
 
     spec = plan.spec
     fn = plan.mesh_callable()
-    y = np.asarray(fn(jnp.asarray(np.asarray(x) % plan.field.q, jnp.uint32)),
-                   np.int64)
+    xd = jnp.asarray(np.asarray(x) % plan.field.q, jnp.uint32)
+    with kernel_span("mesh_encode", kind=spec.kind, K=spec.K,
+                     w=int(xd.shape[1])):
+        y = np.asarray(fn(xd), np.int64)
     return y if spec.kind == "dft" else y[: spec.R]
 
 
@@ -170,14 +176,14 @@ class SimulatorBackend(Backend):
 
     def encode(self, plan, x):
         y, net = run_simulator(plan, x)
-        plan._record_net(net, op="encode")
+        plan._record_net(net, op="encode", width=x.shape[1])
         return y
 
     def decode(self, plan, v):
         from ..recover.backends import run_simulator as run_dec
 
         y, net = run_dec(plan, v)
-        plan._record_net(net, op="decode")
+        plan._record_net(net, op="decode", width=v.shape[1])
         return y
 
 

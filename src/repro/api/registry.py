@@ -36,9 +36,20 @@ from dataclasses import dataclass
 from typing import TYPE_CHECKING
 
 from ..core.cost_model import LinearCost
+from ..obs import drift as _drift
+from ..obs.metrics import REGISTRY as _METRICS
 
 if TYPE_CHECKING:
     from .spec import CodeSpec
+
+# the registry families every network-measuring run publishes into
+# (module-level handles: zero name lookup on the hot path)
+_RUNS = _METRICS.counter("coded_runs_total",
+                         "plan executions on network-measuring backends")
+_ROUNDS = _METRICS.counter("sim_rounds_total",
+                           "simulator rounds executed (sum of C1)")
+_C2_ELEMS = _METRICS.counter("sim_c2_elems_total",
+                             "simulator max-message traffic (sum of C2)")
 
 
 class BackendCapabilityError(ValueError):
@@ -188,6 +199,20 @@ class PlanStats:
                        inspection; None on kernel backends)
         stream_stats — `StreamStats` of the last `run_stream` consumed on
                        this thread
+
+    THREAD-LOCAL CONTRACT: these properties answer only for the calling
+    thread.  A thread that has not run this plan reads `None` — never
+    another thread's stats, no matter how recently that other thread ran
+    (so a queue worker's measurements are invisible to the submitting
+    thread; use the obs registry / drift ledger for cross-thread
+    aggregates).  This is a guarantee, not a limitation: it is what makes
+    `plan.last_stats` race-free on shared cached plans, and it is pinned
+    by a regression test (`test_obs.py::test_plan_stats_cross_thread`).
+
+    Every `_record_net` additionally publishes into the process-wide
+    `obs.metrics.REGISTRY` (run/round/traffic counters) and — when the
+    caller passes the run's payload `width` — checks the measured (C1, C2)
+    against the closed-form cost model via `obs.drift.LEDGER`.
     """
 
     @property
@@ -206,7 +231,13 @@ class PlanStats:
     def stream_stats(self, value) -> None:
         self._tls.stream_stats = value
 
-    def _record_net(self, net, op: str) -> None:
+    def _record_net(self, net, op: str, width: int | None = None) -> None:
         self._tls.net = net
         self._tls.stats = RunStats(net.C1, net.C2, backend=self.backend,
                                    op=op)
+        kind = self.spec.kind
+        _RUNS.inc(1, backend=self.backend, op=op, kind=kind)
+        _ROUNDS.inc(net.C1, backend=self.backend, op=op, kind=kind)
+        _C2_ELEMS.inc(net.C2, backend=self.backend, op=op, kind=kind)
+        if width is not None:
+            _drift.record_run(self, net, op, width)

@@ -37,8 +37,16 @@ from typing import Callable, Iterable, Iterator
 
 import numpy as np
 
+from ..obs.metrics import REGISTRY as _METRICS
+from ..obs.trace import get_tracer
+
 DEFAULT_VMEM_BUDGET_BYTES = 4 << 20  # (K, w) uint32 payload tile budget
 _LANES = 128                         # TPU register lane width
+
+_CHUNKS = _METRICS.counter("stream_chunks_total",
+                           "chunks executed through run_stream")
+_CHUNK_ELEMS = _METRICS.counter(
+    "stream_elems_total", "payload field elements streamed (K * w summed)")
 
 
 def default_chunk_w(K: int, *, itemsize: int = 4,
@@ -136,7 +144,8 @@ def run_paired_stream(plan, chunks: Iterator[np.ndarray], slice_fn: Callable,
 
 
 def _pipelined(chunks: Iterator[np.ndarray], to_device: Callable,
-               dev_fn: Callable, finalize: Callable) -> Iterator[np.ndarray]:
+               dev_fn: Callable, finalize: Callable,
+               tracer=None) -> Iterator[np.ndarray]:
     """Double-buffered device pipeline.
 
     For each chunk: dispatch compute on the resident buffer, enqueue the
@@ -144,17 +153,52 @@ def _pipelined(chunks: Iterator[np.ndarray], to_device: Callable,
     in-flight result — so on an async backend the k+1 transfer overlaps
     the k compute, and the jitted callable's buffers turn over without a
     host sync between chunks.
+
+    With a `tracer`, the three pipeline stages of every chunk become
+    spans on a "stream"/"pipeline" track (h2d / dispatch / materialize);
+    the untraced loop is the byte-identical fast path.
     """
+    if tracer is None:
+        cur = None
+        for c in chunks:
+            if cur is None:
+                cur = to_device(c)
+                continue
+            y = dev_fn(cur)          # async dispatch of chunk k
+            cur = to_device(c)       # H2D of chunk k+1 overlaps the compute
+            yield finalize(y)        # block on chunk k only now
+        if cur is not None:
+            yield finalize(dev_fn(cur))
+        return
+
+    def _span(name, k):
+        return tracer.span(name, pid="stream", tid="pipeline",
+                           cat="stream", args={"chunk": k})
+
     cur = None
+    k = 0          # index of the chunk resident on device
+    n = 0          # index of the chunk being transferred
     for c in chunks:
         if cur is None:
-            cur = to_device(c)
+            with _span("h2d", n):
+                cur = to_device(c)
+            n += 1
             continue
-        y = dev_fn(cur)          # async dispatch of chunk k
-        cur = to_device(c)       # H2D of chunk k+1 overlaps the compute
-        yield finalize(y)        # block on chunk k only now
+        with _span("dispatch", k):
+            y = dev_fn(cur)
+        with _span("h2d", n):
+            cur = to_device(c)
+        with _span("materialize", k):
+            out = finalize(y)
+        yield out
+        k += 1
+        n += 1
     if cur is not None:
-        yield finalize(dev_fn(cur))
+        with _span("dispatch", k):
+            y = dev_fn(cur)
+        with _span("materialize", k):
+            out = finalize(y)
+        yield out
 
 
 def run_stream(plan, payload, *, chunk_w: int | None = None
@@ -171,7 +215,16 @@ def run_stream(plan, payload, *, chunk_w: int | None = None
     """
     from .registry import get_backend
 
-    chunks = iter_chunks(payload, plan.spec.K, chunk_w)
+    K = plan.spec.K
+
+    def _counted(cs):
+        for c in cs:
+            _CHUNKS.inc(1, op=plan.op, backend=plan.backend)
+            _CHUNK_ELEMS.inc(K * c.shape[1], op=plan.op,
+                             backend=plan.backend)
+            yield c
+
+    chunks = _counted(iter_chunks(payload, K, chunk_w))
     backend = get_backend(plan.backend)
     if backend.measures_network:
         stats = StreamStats()
@@ -181,12 +234,13 @@ def run_stream(plan, payload, *, chunk_w: int | None = None
             stats.widths.append(c.shape[1])
             stats.C1.append(net.C1)
             stats.C2.append(net.C2)
-            plan._record_net(net, op=plan.op)
+            plan._record_net(net, op=plan.op, width=c.shape[1])
             yield y
         return
     if backend.supports_stream:
         to_device, dev_fn, finalize = plan._stream_device_fn()
-        yield from _pipelined(chunks, to_device, dev_fn, finalize)
+        yield from _pipelined(chunks, to_device, dev_fn, finalize,
+                              tracer=get_tracer())
         return
     run_chunk = backend.encode if plan.op == "encode" else backend.decode
     for c in chunks:

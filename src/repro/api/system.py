@@ -91,17 +91,28 @@ class CodedSystem:
               different sessions coalesce into one batched execution, and
               `close()` never closes a queue the session does not own.
               Must be on the same backend as the session.
+    trace   : observability tracer — True (collect, read
+              `system.tracer`), an `obs.trace.Tracer`, or a path (trace
+              JSON written there on `close()`).  Installed process-wide
+              for the session's lifetime, so simulator rounds, stream
+              pipeline stages, and kernel launches under this session
+              all land on one timeline.
     """
 
     def __init__(self, spec: CodeSpec, backend: str = "simulator", *,
                  method: str = "auto", A: np.ndarray | None = None,
                  link: LinkModel | None = None, chunk_w: int | None = None,
-                 queue: Any = None):
+                 queue: Any = None, trace=None):
         self.spec = spec
         self.backend = backend
         self.link = link or LinkModel()
         self.chunk_w = chunk_w
         self._A = A
+        from ..obs import trace as _trace_mod
+
+        self.tracer, self._trace_path = _trace_mod.resolve(trace)
+        if self.tracer is not None:
+            _trace_mod.install(self.tracer)
         if queue is not None and queue.backend != backend:
             raise ValueError(
                 f"shared queue runs backend {queue.backend!r} but the "
@@ -467,6 +478,13 @@ class CodedSystem:
             queue, self._queue = self._queue, None
         if queue is not None:
             queue.close()
+        if self.tracer is not None:
+            from ..obs import trace as _trace_mod
+
+            _trace_mod.uninstall(self.tracer)
+            if self._trace_path is not None:
+                self.tracer.save(self._trace_path)
+                self._trace_path = None  # idempotent close()
 
     def __enter__(self) -> "CodedSystem":
         return self
@@ -525,6 +543,12 @@ class CodedSystem:
         from . import cache_info
 
         out["cache"] = cache_info()
+        from ..obs.drift import LEDGER
+        from ..obs.metrics import REGISTRY
+
+        out["metrics"] = REGISTRY.snapshot()
+        if get_backend(self.backend).measures_network:
+            out["drift"] = LEDGER.snapshot()
         return out
 
     def describe(self) -> str:
@@ -548,4 +572,8 @@ class CodedSystem:
                           f"{list(self.failed)} is information-losing for "
                           f"this (non-MDS) code"]
             lines += ["  " + ln for ln in dlines]
+        if get_backend(self.backend).measures_network:
+            from ..obs.drift import LEDGER
+
+            lines += ["  " + ln for ln in LEDGER.describe().splitlines()]
         return "\n".join(lines)

@@ -39,6 +39,37 @@ from __future__ import annotations
 import itertools
 from dataclasses import dataclass, field as dc_field
 
+from ..obs.trace import get_tracer
+
+
+@dataclass(frozen=True)
+class RoundEvent:
+    """Structured record of one accounted round (the `round_log` entry).
+
+    round — 1-based round index on this network (== C1 after the round)
+    n_msgs, m_t — message count and max message size of the round
+    sent, recv — per-processor field elements moved this round, as sorted
+                 ((proc, elems), ...) tuples
+
+    Unpacks as the legacy `(n_msgs, m_t)` pair, so existing consumers of
+    `round_log` (`sum(m for _, m in net.round_log)`) keep working.
+    """
+
+    round: int
+    n_msgs: int
+    m_t: int
+    sent: tuple = ()
+    recv: tuple = ()
+
+    def __iter__(self):
+        return iter((self.n_msgs, self.m_t))
+
+    def __getitem__(self, i):
+        return (self.n_msgs, self.m_t)[i]
+
+    def __len__(self):
+        return 2
+
 
 @dataclass(frozen=True)
 class Msg:
@@ -109,8 +140,14 @@ class PartialRunError(FailedProcessorError):
 class RoundNetwork:
     """Validates port constraints and accumulates C1/C2 across schedules.
 
-    `keep_log` enables the per-round (n_msgs, m_t) trace on `round_log`;
-    it is off by default so long simulations don't grow memory per round.
+    `keep_log` enables the per-round `RoundEvent` trace on `round_log`
+    (each entry still unpacks as the legacy (n_msgs, m_t) pair); it is off
+    by default so long simulations don't grow memory per round.
+    `tracer` emits per-round events on per-processor tracks plus
+    kill/abort instants to an `obs.trace.Tracer`; it defaults to the
+    process-installed tracer (`obs.trace.get_tracer()`, None when tracing
+    is off — pass `tracer=False` to silence a network while one is
+    installed).
     `fail(procs)` erases processors: they may neither send nor receive, and
     any schedule touching them raises `FailedProcessorError` — repair
     schedules must route around the erasure set (Sec. I fault model).
@@ -136,6 +173,16 @@ class RoundNetwork:
     # FailedProcessorError contract)
     pending_kills: dict = dc_field(default_factory=dict, repr=False)
     injected: set = dc_field(default_factory=set, repr=False)
+    # obs.trace.Tracer | None | False — resolved once at construction so
+    # the per-round hot path is a single attribute check when tracing is
+    # off (the zero-overhead-by-default contract)
+    tracer: object = dc_field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.tracer is None:
+            self.tracer = get_tracer()
+        elif self.tracer is False:
+            self.tracer = None
 
     def _check_procs(self, procs) -> set[int]:
         procs = {int(q) for q in procs}
@@ -147,7 +194,13 @@ class RoundNetwork:
 
     def fail(self, procs) -> None:
         """Mark processors as erased (no sends, no receives, ever after)."""
-        self.failed |= self._check_procs(procs)
+        procs = self._check_procs(procs)
+        if self.tracer is not None:
+            for q in sorted(procs - self.failed):
+                self.tracer.instant(
+                    "fail", pid="simulator", tid=f"proc {q}", cat="sim.fail",
+                    args={"round": self.C1, "proc": q})
+        self.failed |= procs
 
     def fail_at(self, round: int, procs) -> None:
         """Register a live kill: `procs` die between rounds, as soon as C1
@@ -171,9 +224,16 @@ class RoundNetwork:
             fired |= self.pending_kills.pop(r)
         self.injected |= fired
         self.failed |= fired
+        if fired and self.tracer is not None:
+            for q in sorted(fired):
+                self.tracer.instant(
+                    "kill", pid="simulator", tid=f"proc {q}", cat="sim.fail",
+                    args={"round": self.C1, "proc": q})
         return fired
 
     def _account(self, msgs: list[Msg]) -> None:
+        tracer = self.tracer
+        t0 = tracer.now_us() if tracer is not None else 0.0
         sends: dict[int, int] = {}
         recvs: dict[int, int] = {}
         for m in msgs:
@@ -204,8 +264,31 @@ class RoundNetwork:
         self.total_elems += sum(m.n_elems for m in msgs)
         for m in msgs:
             self.received[m.dst] = self.received.get(m.dst, 0) + m.n_elems
-        if self.keep_log:
-            self.round_log.append((len(msgs), m_t))
+        if self.keep_log or tracer is not None:
+            sent_e: dict[int, int] = {}
+            recv_e: dict[int, int] = {}
+            for m in msgs:
+                sent_e[m.src] = sent_e.get(m.src, 0) + m.n_elems
+                recv_e[m.dst] = recv_e.get(m.dst, 0) + m.n_elems
+            ev = RoundEvent(self.C1, len(msgs), m_t,
+                            tuple(sorted(sent_e.items())),
+                            tuple(sorted(recv_e.items())))
+            if self.keep_log:
+                self.round_log.append(ev)
+            if tracer is not None:
+                dur = max(tracer.now_us() - t0, 0.001)
+                tracer.complete(
+                    "round", t0, dur, pid="simulator", tid="rounds",
+                    cat="sim.round",
+                    args={"round": ev.round, "n_msgs": ev.n_msgs,
+                          "m_t": ev.m_t})
+                for proc in sorted(set(sent_e) | set(recv_e)):
+                    tracer.complete(
+                        "round", t0, dur, pid="simulator",
+                        tid=f"proc {proc}", cat="sim.proc",
+                        args={"round": ev.round, "m_t": ev.m_t,
+                              "sent": sent_e.get(proc, 0),
+                              "recv": recv_e.get(proc, 0)})
 
     def run(self, *schedules) -> None:
         """Advance all schedules in lockstep until all are exhausted.
@@ -234,6 +317,11 @@ class RoundNetwork:
                 except FailedProcessorError as exc:
                     if (not isinstance(exc, PartialRunError)
                             and exc.proc in self.injected):
+                        if self.tracer is not None:
+                            self.tracer.instant(
+                                "abort", pid="simulator",
+                                tid=f"proc {exc.proc}", cat="sim.fail",
+                                args={"round": self.C1, "proc": exc.proc})
                         raise PartialRunError(self, exc.proc) from exc
                     raise
             elif gens:

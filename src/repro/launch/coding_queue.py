@@ -49,6 +49,18 @@ from typing import Any, Callable
 
 import numpy as np
 
+from ..obs.metrics import REGISTRY as _METRICS
+from ..obs.trace import get_tracer
+
+_Q_REQS = _METRICS.counter("queue_requests_total",
+                           "requests drained by the coding queue")
+_Q_BATCHES = _METRICS.counter("queue_batches_total",
+                              "coalesced plan-group executions")
+_Q_FAILOVERS = _METRICS.counter(
+    "queue_failovers_total", "requests replanned onto a superset pattern")
+_Q_GROUP = _METRICS.histogram("queue_group_size",
+                              "requests coalesced per group execution")
+
 
 @dataclass
 class _Request:
@@ -63,6 +75,7 @@ class _Request:
     effective: tuple | None = None       # pattern resolved at drain time
     meta: Any = None           # opaque caller tag, echoed to the observer
     group_n: int = 1           # size of the coalesced group it executed in
+    t_submit: float = 0.0      # tracer timestamp at submit (0 = untraced)
 
 
 @dataclass
@@ -154,6 +167,9 @@ class CodingQueue:
         # before close lands ahead of the sentinel (the worker drains it),
         # a submit serialized after raises — a late request can never slip
         # in behind the worker's final drain and hang its future
+        tracer = get_tracer()
+        if tracer is not None:
+            req.t_submit = tracer.now_us()
         with self._plock:
             if self._closing or self._worker is None:
                 raise RuntimeError("queue is closed")
@@ -218,6 +234,21 @@ class CodingQueue:
                 batch.append(nxt)
 
     def _resolve(self, req: _Request, *, result=None, exc=None) -> None:
+        if req.t_submit:
+            tracer = get_tracer()
+            if tracer is not None:
+                # one span per request: submit -> (coalesce+execute) ->
+                # resolve, on the queue's per-op track
+                tracer.complete(
+                    f"op.{req.op}", req.t_submit,
+                    tracer.now_us() - req.t_submit, pid="queue",
+                    tid=req.op, cat="queue.op",
+                    args={"group_n": req.group_n,
+                          "kind": req.spec.kind, "K": req.spec.K,
+                          "ok": exc is None,
+                          "failover": bool(req.op != "encode"
+                                           and req.effective is not None
+                                           and req.effective != req.erased)})
         if self.observer is not None and req.meta is not None:
             # BEFORE the future resolves: a client unblocked by result()
             # must already see this op in the observer-fed stats
@@ -245,6 +276,7 @@ class CodingQueue:
         live = tuple(sorted({int(e) for e in req.pattern_ref()}))
         if set(live) > set(req.erased):
             self.stats.failovers += 1
+            _Q_FAILOVERS.inc(1, backend=self.backend)
             return live
         return req.erased
 
@@ -260,6 +292,8 @@ class CodingQueue:
             first = self._q.get()
             batch, closing = self._drain(first)
             self.stats.requests += len(batch)  # single-writer: the worker
+            if batch:
+                _Q_REQS.inc(len(batch), backend=self.backend)
             groups: dict[tuple, list[_Request]] = {}
             for req in batch:
                 req.effective = self._effective_pattern(req)
@@ -308,13 +342,28 @@ class CodingQueue:
         return out
 
     def _process_group(self, reqs: list[_Request]) -> None:
+        self.stats.batches += 1
+        self.stats.coalesced.append(len(reqs))
+        _Q_BATCHES.inc(1, backend=self.backend, op=reqs[0].op)
+        _Q_GROUP.observe(len(reqs), backend=self.backend, op=reqs[0].op)
+        for req in reqs:
+            req.group_n = len(reqs)
+        tracer = get_tracer()
+        if tracer is not None:
+            r0 = reqs[0]
+            with tracer.span(f"execute.{r0.op}", pid="queue", tid="worker",
+                             cat="queue.exec",
+                             args={"group_n": len(reqs),
+                                   "kind": r0.spec.kind, "K": r0.spec.K,
+                                   "R": r0.spec.R}):
+                self._execute_group(reqs)
+        else:
+            self._execute_group(reqs)
+
+    def _execute_group(self, reqs: list[_Request]) -> None:
         from ..api import Encoder
         from ..recover import Decoder
 
-        self.stats.batches += 1
-        self.stats.coalesced.append(len(reqs))
-        for req in reqs:
-            req.group_n = len(reqs)
         try:
             r0 = reqs[0]
             if r0.op == "encode":

@@ -305,9 +305,37 @@ def main():
                     help="failure-injection scenario: kill up to R "
                          "processors at random rounds while serving queued "
                          "encodes/decodes/rebuilds, self-check bitwise")
+    ap.add_argument("--trace", default=None, metavar="OUT.json",
+                    help="capture a Chrome trace-event timeline of the whole "
+                         "run (simulator rounds, stream pipeline, queue/"
+                         "service ops, kernels) — load in ui.perfetto.dev")
+    ap.add_argument("--metrics", action="store_true",
+                    help="dump the unified metrics registry (text "
+                         "exposition format) at exit")
     args = ap.parse_args()
     if args.degraded and not args.coded_selfcheck:
         ap.error("--degraded modifies the self-check; pass --coded-selfcheck")
+    tracer = None
+    if args.trace:
+        from ..obs import trace as _trace
+
+        tracer = _trace.install(_trace.Tracer())
+    try:
+        _run(args, ap)
+    finally:
+        if tracer is not None:
+            from ..obs import trace as _trace
+
+            _trace.uninstall(tracer)
+            print(f"trace   : {len(tracer)} events -> "
+                  f"{tracer.save(args.trace)}")
+        if args.metrics:
+            from ..obs.metrics import REGISTRY
+
+            print(REGISTRY.render_text(), end="")
+
+
+def _run(args, ap):
     if args.chaos:
         try:
             kills, seed = (int(t) for t in args.chaos.split(","))

@@ -56,6 +56,8 @@ import numpy as np
 from ..api.planner import _digest
 from ..api.spec import CodeSpec
 from ..api.system import CodedSystem
+from ..obs import trace as _trace
+from ..obs.metrics import REGISTRY as _METRICS
 from .coding_queue import CodingQueue
 from .tenancy import (
     AdmissionController,
@@ -68,6 +70,13 @@ __all__ = ["CodedService", "QueueFullError", "ServiceStats", "TenantQuota"]
 
 _OPS = ("encode", "decode", "rebuild")
 
+_SVC_OPS = _METRICS.counter("service_ops_total",
+                            "tenant operations settled by the service")
+_SVC_REJECTED = _METRICS.counter("service_rejected_total",
+                                 "submissions refused at admission")
+_SVC_LAT = _METRICS.histogram("service_latency_us",
+                              "submit-to-settle latency per tenant op")
+
 
 @dataclass
 class _OpMeta:
@@ -79,6 +88,8 @@ class _OpMeta:
     tag: str | None
     nbytes: int
     t0: float
+    op: str = "?"
+    t_trace: float = 0.0   # tracer timestamp at submit (0 = untraced)
 
 
 class CodedService:
@@ -92,6 +103,13 @@ class CodedService:
     default_quota     : `TenantQuota` for tenants without an explicit one
     max_sessions      : session-pool size before idle LRU eviction
     chunk_w/max_batch_w : forwarded to the shared `CodingQueue`
+    trace             : observability tracer — True (collect, read
+                        `svc.tracer`), an `obs.trace.Tracer`, or a path
+                        (trace JSON written there on `close()`).  The
+                        tracer is process-installed for the service's
+                        lifetime, so every layer underneath (queue,
+                        stream pipeline, simulator rounds, kernels)
+                        emits onto the same timeline.
     """
 
     def __init__(self, backend: str = "local", *,
@@ -100,8 +118,12 @@ class CodedService:
                  default_quota: TenantQuota | None = None,
                  max_sessions: int = 64,
                  chunk_w: int | None = None,
-                 max_batch_w: int = 1 << 16):
+                 max_batch_w: int = 1 << 16,
+                 trace=None):
         self.backend = backend
+        self.tracer, self._trace_path = _trace.resolve(trace)
+        if self.tracer is not None:
+            _trace.install(self.tracer)
         self._admission = AdmissionController(
             max_ops=max_inflight_ops, max_bytes=max_inflight_bytes,
             default_quota=default_quota)
@@ -204,18 +226,31 @@ class CodedService:
         stats = self._tenant_stats(tenant)
         v = np.asarray(payload)
         nbytes = int(v.nbytes)
+        tracer = _trace.get_tracer()
         try:
-            self._admission.acquire(tenant, nbytes, block=block,
-                                    timeout=timeout)
+            if tracer is not None:
+                # the admit span makes backpressure *visible*: a long one
+                # is time spent blocked on quota, not compute
+                with tracer.span("admit", pid="service", tid=tenant,
+                                 cat="service.admit",
+                                 args={"op": op, "nbytes": nbytes}):
+                    self._admission.acquire(tenant, nbytes, block=block,
+                                            timeout=timeout)
+            else:
+                self._admission.acquire(tenant, nbytes, block=block,
+                                        timeout=timeout)
         except QueueFullError:
             stats.record_rejected()
+            _SVC_REJECTED.inc(1, tenant=tenant, op=op)
             if tag is not None:
                 self._tag_stats(tag).record_rejected()
             raise
         try:
             sess = self.session(tenant, spec, A=A)
             meta = _OpMeta(tenant, self._key(tenant, spec, A), tag, nbytes,
-                           time.perf_counter())
+                           time.perf_counter(), op=op,
+                           t_trace=(tracer.now_us() if tracer is not None
+                                    else 0.0))
             with self._lock:
                 self._session_inflight[meta.key] = \
                     self._session_inflight.get(meta.key, 0) + 1
@@ -251,6 +286,21 @@ class CodedService:
             if meta.tag is not None:
                 self._tag_stats(meta.tag).record_done(lat_us, meta.nbytes,
                                                       ok)
+            _SVC_OPS.inc(1, tenant=meta.tenant, op=meta.op,
+                         status="ok" if ok else "error")
+            _SVC_LAT.observe(lat_us, tenant=meta.tenant, op=meta.op)
+            if meta.t_trace:
+                tracer = _trace.get_tracer()
+                if tracer is not None:
+                    # per-tenant op-lifetime span: submit -> settle (queue
+                    # residency + execution + callback), tagged for the
+                    # viewer's detail pane
+                    tracer.complete(
+                        f"op.{meta.op}", meta.t_trace,
+                        tracer.now_us() - meta.t_trace, pid="service",
+                        tid=meta.tenant, cat="service.op",
+                        args={"tenant": meta.tenant, "tag": meta.tag,
+                              "nbytes": meta.nbytes, "ok": ok})
 
     def _on_done(self, meta: _OpMeta, fut) -> None:
         ok = not fut.cancelled() and fut.exception() is None
@@ -292,6 +342,7 @@ class CodedService:
             },
             "tenants": tenants,
             "tags": tags,
+            "metrics": _METRICS.snapshot(),
         }
 
     def latencies_us(self, tenant: str | None = None) -> list[float]:
@@ -350,6 +401,10 @@ class CodedService:
         finally:
             for sess in sessions:
                 sess.close()
+            if self.tracer is not None:
+                _trace.uninstall(self.tracer)
+                if self._trace_path is not None:
+                    self.tracer.save(self._trace_path)
 
     def __enter__(self) -> "CodedService":
         return self

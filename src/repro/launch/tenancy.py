@@ -249,9 +249,15 @@ class ServiceStats:
     inflight_bytes: int = 0
     executed: int = 0      # ops with coalescing info (resolved by the queue)
     coalesced_ops: int = 0  # sum of batch group sizes over executed ops
+    lat_recorded: int = 0  # latency samples ever recorded (incl. evicted)
     _lat_us: deque = dc_field(default_factory=deque, repr=False)
     _lock: threading.Lock = dc_field(default_factory=threading.Lock,
                                      repr=False)
+
+    def __post_init__(self):
+        # bounded reservoir: the deque trims itself (maxlen) instead of a
+        # hand-rolled popleft loop on every record
+        self._lat_us = deque(self._lat_us, maxlen=self.reservoir)
 
     def record_submitted(self, nbytes: int) -> None:
         with self._lock:
@@ -279,8 +285,7 @@ class ServiceStats:
             else:
                 self.failed += 1
             self._lat_us.append(latency_us)
-            while len(self._lat_us) > self.reservoir:
-                self._lat_us.popleft()
+            self.lat_recorded += 1
 
     @property
     def coalescing_ratio(self) -> float:
@@ -310,6 +315,11 @@ class ServiceStats:
                 "executed": self.executed,
                 "coalescing_ratio": (self.coalesced_ops / self.executed
                                      if self.executed else float("nan")),
+                # reservoir visibility: percentiles below cover only the
+                # most recent `lat_samples`; `lat_dropped` older samples
+                # were evicted (nonzero => truncated percentiles)
+                "lat_samples": len(lat),
+                "lat_dropped": self.lat_recorded - len(lat),
             }
         out["p50_us"] = percentile(lat, 0.50)
         out["p99_us"] = percentile(lat, 0.99)

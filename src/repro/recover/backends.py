@@ -22,6 +22,7 @@ from functools import partial
 import numpy as np
 
 from ..core.simulator import RoundNetwork
+from ..obs.trace import kernel_span
 from .engine import decentralized_decode
 
 
@@ -59,7 +60,9 @@ def run_local(plan, v: np.ndarray) -> np.ndarray:
 
     q = plan.field.q
     v32 = jnp.asarray(np.asarray(v) % q, jnp.uint32)
-    y = local_decode_callable(plan)(v32)
+    with kernel_span("local_decode", kind=plan.spec.kind, K=plan.spec.K,
+                     E=len(plan.erased), w=int(v32.shape[1])):
+        y = local_decode_callable(plan)(v32)
     return np.asarray(y, np.int64)
 
 
@@ -112,7 +115,9 @@ def run_mesh(plan, v: np.ndarray) -> np.ndarray:
     q = plan.field.q
     vg = jnp.asarray(np.asarray(v) % q, jnp.uint32)
     out = []
-    for fn, (eb, _) in zip(_mesh_callables(plan), plan.tables.batches()):
-        y = np.asarray(fn(vg), np.int64)
-        out.append(y[:eb])
+    with kernel_span("mesh_decode", kind=plan.spec.kind, K=plan.spec.K,
+                     E=len(plan.erased), w=int(vg.shape[1])):
+        for fn, (eb, _) in zip(_mesh_callables(plan), plan.tables.batches()):
+            y = np.asarray(fn(vg), np.int64)
+            out.append(y[:eb])
     return np.concatenate(out, axis=0)

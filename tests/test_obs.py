@@ -1,0 +1,309 @@
+"""Unified observability layer: round-level tracing (Chrome trace-event
+export), the one metrics registry, and the cost-model drift ledger —
+trace correctness under chaos, snapshot consistency under concurrency,
+and the zero-drift acceptance criterion across all four code kinds."""
+import json
+import threading
+
+import numpy as np
+import pytest
+
+from repro.api import CodeSpec, CodedSystem, Encoder
+from repro.core.field import FERMAT
+from repro.core.simulator import PartialRunError, RoundNetwork
+from repro.obs import drift, metrics, trace
+from repro.recover import Decoder
+
+RNG = np.random.default_rng(41)
+
+
+def _spec(kind, K, R, **kw):
+    if kind == "universal":
+        kw.setdefault("seed", 5)
+    return CodeSpec(kind=kind, K=K, R=R, **kw)
+
+
+def _codeword(spec, x):
+    plan = Encoder.plan(spec, backend="simulator")
+    return np.concatenate([x % spec.q, plan.run(x)], axis=0)
+
+
+# ---------------------------------------------------------------------------
+# tracer: export shape + chaos correctness
+# ---------------------------------------------------------------------------
+
+def test_tracer_export_is_valid_chrome_trace(tmp_path):
+    t = trace.Tracer()
+    with t.span("work", pid="p", tid="t", args={"k": 1}):
+        t.instant("mark", pid="p", tid="t")
+    path = tmp_path / "out.json"
+    t.save(path)
+    d = json.loads(path.read_text())
+    assert d["displayTimeUnit"] == "ms"
+    evs = d["traceEvents"]
+    # metadata names the string tracks; pid/tid in events are interned ints
+    names = {e["args"]["name"] for e in evs if e["ph"] == "M"}
+    assert {"p", "t"} <= names
+    phs = [e["ph"] for e in evs if e["ph"] != "M"]
+    assert sorted(phs) == ["X", "i"]
+    assert all(isinstance(e["pid"], int) and isinstance(e["tid"], int)
+               for e in evs)
+
+
+def test_trace_rounds_bitwise_match_network_counters():
+    spec = _spec("rs", 16, 4)
+    x = FERMAT.rand((16, 3), RNG)
+    with trace.installed() as t:
+        plan = Encoder.plan(spec, backend="simulator")
+        plan.run(x)
+        net = plan.sim_net
+        rounds = t.events(cat="sim.round")
+    assert len(rounds) == net.C1
+    assert sum(e["args"]["m_t"] for e in rounds) == net.C2
+    # per-processor tracks tell the same story: per round, the max over
+    # procs of sent elems IS that round's m_t contribution upper bound
+    per_proc = t.events(cat="sim.proc")
+    assert {e["args"]["round"] for e in per_proc} == \
+        {e["args"]["round"] for e in rounds}
+
+
+def test_chaos_kill_instant_lands_in_the_right_round():
+    spec = _spec("rs", 8, 4)
+    cw = _codeword(spec, FERMAT.rand((8, 3), RNG))
+    tracer = trace.Tracer()
+    net = RoundNetwork(spec.N, spec.p, tracer=tracer)
+    net.fail_at(1, (3,))
+    plan = Decoder.plan(spec, erased=(0, 9), backend="simulator")
+    from repro.recover import decentralized_decode
+
+    net.fail((0, 9))
+    with pytest.raises(PartialRunError):
+        decentralized_decode(FERMAT, plan.tables.D,
+                             FERMAT.arr(cw[list(plan.kept)]),
+                             list(plan.kept), spec.p, net)
+    kills = tracer.events(cat="sim.fail", name="kill")
+    assert [e["args"] for e in kills] == [{"round": 1, "proc": 3}]
+    aborts = tracer.events(cat="sim.fail", name="abort")
+    assert len(aborts) == 1 and aborts[0]["args"]["proc"] == 3
+    # static fails got their own instants, on per-processor tracks
+    fails = tracer.events(cat="sim.fail", name="fail")
+    assert {e["args"]["proc"] for e in fails} == {0, 9}
+    # the completed prefix is fully traced: one round event per accounted
+    # round, C2 preserved bitwise
+    rounds = tracer.events(cat="sim.round")
+    assert len(rounds) == net.C1 == 1
+    assert sum(e["args"]["m_t"] for e in rounds) == net.C2
+
+
+def test_round_log_events_keep_legacy_tuple_contract():
+    net = RoundNetwork(8, 1, keep_log=True, tracer=False)
+    from repro.core.prepare_shoot import prepare_shoot
+
+    out = {}
+    vals = {k: FERMAT.rand((2,), RNG) for k in range(8)}
+    net.run(prepare_shoot(FERMAT, FERMAT.rand((8, 8), RNG), vals,
+                          list(range(8)), 1, out))
+    assert len(net.round_log) > 0
+    # legacy consumers unpack (n_msgs, m_t) 2-tuples
+    assert net.C2 == sum(m for _, m in net.round_log)
+    ev = net.round_log[0]
+    assert len(ev) == 2 and ev[0] == ev.n_msgs and ev[1] == ev.m_t
+    # the structured upgrade rides along: per-proc send/recv breakdowns
+    # that sum to the round's traffic
+    assert sum(n for _, n in ev.sent) == sum(n for _, n in ev.recv)
+
+
+def test_tracing_off_means_no_tracer_consulted():
+    assert trace.get_tracer() is None
+    net = RoundNetwork(4, 1)
+    assert net.tracer is None  # resolved once, hot path is one None check
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+def test_registry_counter_gauge_histogram_roundtrip():
+    reg = metrics.MetricsRegistry()
+    reg.counter("ops_total", "ops").inc(2, op="encode")
+    reg.gauge("depth").set(7, q="a")
+    h = reg.histogram("lat_us")
+    for v in (1.0, 3.0, 2.0):
+        h.observe(v, op="encode")
+    snap = reg.snapshot()
+    assert snap["ops_total"]["values"]["op=encode"] == 2
+    assert snap["depth"]["values"]["q=a"] == 7
+    hv = snap["lat_us"]["values"]["op=encode"]
+    assert hv == {"count": 3, "sum": 6.0, "min": 1.0, "max": 3.0,
+                  "mean": 2.0}
+    text = reg.render_text()
+    assert 'repro_ops_total{op="encode"} 2' in text
+    assert "repro_lat_us_count" in text
+    with pytest.raises(ValueError):
+        reg.gauge("ops_total")  # name already registered as a counter
+
+
+def test_registry_snapshot_consistent_under_concurrency():
+    reg = metrics.MetricsRegistry()
+    a = reg.counter("a_total")
+    b = reg.counter("b_total")
+    stop = threading.Event()
+
+    def writer():
+        while not stop.is_set():
+            # invariant: a is ALWAYS incremented before b
+            a.inc(1, t="x")
+            b.inc(1, t="x")
+
+    threads = [threading.Thread(target=writer) for _ in range(4)]
+    for t in threads:
+        t.start()
+    try:
+        for _ in range(300):
+            snap = reg.snapshot()
+            av = snap["a_total"]["values"].get("t=x", 0)
+            bv = snap["b_total"]["values"].get("t=x", 0)
+            # one lock guards all families: no snapshot may catch b ahead
+            # of a (each writer orders a before b under that lock)
+            assert av >= bv
+    finally:
+        stop.set()
+        for t in threads:
+            t.join()
+
+
+def test_plan_run_publishes_into_the_registry():
+    before = metrics.REGISTRY.snapshot().get(
+        "coded_runs_total", {}).get("values", {}).get(
+        "backend=simulator,kind=rs,op=encode", 0)
+    spec = _spec("rs", 8, 4)
+    Encoder.plan(spec, backend="simulator").run(FERMAT.rand((8, 2), RNG))
+    after = metrics.REGISTRY.snapshot()["coded_runs_total"]["values"][
+        "backend=simulator,kind=rs,op=encode"]
+    assert after == before + 1
+
+
+# ---------------------------------------------------------------------------
+# drift ledger: measured C1/C2 vs the closed-form model
+# ---------------------------------------------------------------------------
+
+KINDS = [("universal", 16, 4, (2, 17)), ("rs", 16, 4, (1, 18)),
+         ("lagrange", 16, 4, (0, 19)), ("dft", 8, 8, (5, 9, 13))]
+
+
+def test_zero_drift_across_all_kinds_on_simulator():
+    drift.LEDGER.reset()
+    for kind, K, R, erased in KINDS:
+        spec = _spec(kind, K, R)
+        x = FERMAT.rand((K, 3), RNG)
+        sys1 = CodedSystem(spec, backend="simulator")
+        cw = sys1.codeword(x)
+        sys1.fail(erased)
+        assert np.array_equal(sys1.decode(cw), cw[list(erased)])
+        sys1.close()
+    entries = drift.LEDGER.entries()
+    # every kind contributed an encode AND a decode cell, all exact
+    assert {(e.spec.kind, e.op) for e in entries} == \
+        {(k, op) for k, _, _, _ in KINDS for op in ("encode", "decode")}
+    assert all(e.runs == e.exact for e in entries)
+    assert drift.LEDGER.drifted() == []
+    assert "ZERO drift" in drift.LEDGER.describe()
+
+
+def test_streamed_runs_keep_zero_drift():
+    drift.LEDGER.reset()
+    spec = _spec("rs", 16, 4)
+    plan = Encoder.plan(spec, backend="simulator")
+    for _ in plan.run_stream(FERMAT.rand((16, 400), RNG), chunk_w=128):
+        pass
+    entries = drift.LEDGER.entries()
+    assert entries and drift.LEDGER.drifted() == []
+    assert sum(e.runs for e in entries) == 4  # ceil(400/128) chunks
+
+
+def test_drift_fails_loudly_on_model_mismatch():
+    drift.LEDGER.reset()
+    spec = _spec("rs", 8, 4)
+    plan = Encoder.plan(spec, backend="simulator")
+    net = RoundNetwork(spec.N, spec.p, tracer=False)
+    net.C1, net.C2 = 999, 999  # a cooked measurement cannot match
+    drift.record_run(plan, net, "encode", 1)
+    bad = drift.LEDGER.drifted()
+    assert len(bad) == 1 and bad[0].last_mismatch is not None
+    assert "DRIFTED" in drift.LEDGER.describe()
+    drift.LEDGER.reset()
+
+
+def test_system_stats_surface_metrics_and_drift():
+    drift.LEDGER.reset()
+    spec = _spec("rs", 8, 4)
+    with CodedSystem(spec, backend="simulator") as sys1:
+        sys1.codeword(FERMAT.rand((8, 2), RNG))
+        st = sys1.stats()
+    assert "coded_runs_total" in st["metrics"]
+    assert st["drift"]["drifted"] == 0
+    assert st["drift"]["runs"] == st["drift"]["exact"] > 0
+    with CodedSystem(spec, backend="local") as sys2:
+        assert "drift" not in sys2.stats()  # nothing measured to compare
+
+
+# ---------------------------------------------------------------------------
+# ServiceStats latency reservoir (deque(maxlen=...) + dropped accounting)
+# ---------------------------------------------------------------------------
+
+def test_service_stats_reservoir_bounds_and_counts_drops():
+    from repro.launch.tenancy import ServiceStats
+
+    st = ServiceStats("t", reservoir=16)
+    for i in range(40):
+        st.record_submitted(8)
+        st.record_done(float(i), 8, True)
+    snap = st.snapshot()
+    assert snap["lat_samples"] == 16
+    assert snap["lat_dropped"] == 24
+    # the reservoir keeps the NEWEST samples (deque maxlen semantics)
+    assert st.latencies_us() == [float(i) for i in range(24, 40)]
+
+
+# ---------------------------------------------------------------------------
+# PlanStats thread-local contract (pinned by the PlanStats docstring)
+# ---------------------------------------------------------------------------
+
+def test_plan_stats_cross_thread():
+    spec = _spec("rs", 8, 4)
+    plan = Encoder.plan(spec, backend="simulator")
+    plan.run(FERMAT.rand((8, 2), RNG))
+    assert plan.last_stats is not None
+
+    seen = {}
+
+    def reader():
+        # a thread that never ran the plan reads None — never another
+        # thread's stats
+        seen["last"] = plan.last_stats
+        seen["stream"] = plan.stream_stats
+
+    th = threading.Thread(target=reader)
+    th.start()
+    th.join()
+    assert seen == {"last": None, "stream": None}
+    assert plan.last_stats is not None  # the owner's view is untouched
+
+
+# ---------------------------------------------------------------------------
+# CodedSystem trace= user surface
+# ---------------------------------------------------------------------------
+
+def test_coded_system_trace_path_saved_on_close(tmp_path):
+    path = tmp_path / "sys.json"
+    spec = _spec("rs", 8, 4)
+    sys1 = CodedSystem(spec, backend="simulator", trace=str(path))
+    cw = sys1.codeword(FERMAT.rand((8, 2), RNG))
+    sys1.fail([1])
+    sys1.decode(cw)
+    assert trace.get_tracer() is sys1.tracer
+    sys1.close()
+    assert trace.get_tracer() is None  # uninstalled, not leaked
+    d = json.loads(path.read_text())
+    cats = {e.get("cat") for e in d["traceEvents"]}
+    assert "sim.round" in cats and "sim.proc" in cats
