@@ -44,6 +44,10 @@ Sections:
   serve/*        — multi-tenant serving: closed/open-loop load over Zipf
                    volumes, cross-session coalescing ratio, chaos-under-load
                    correctness (benchmarks/serve_bench.py)
+  coded/*        — coded computation under failure: gradient-coded train
+                   step time vs injected straggler count (gated ratio +
+                   bitwise-recovery flag) and the Lagrange-coded matmul
+                   dropout sweep (benchmarks/coded_train_bench.py)
   mesh_encode/*  — lowered-HLO collective bytes, universal vs RS (subprocess)
   mesh_a2a/*     — mesh A2A scaling (subprocess)
   roofline/*     — coding-kernel fraction-of-roofline cells (NTT + dense
@@ -179,7 +183,7 @@ def main() -> None:
                          "without their own (default 0.25)")
     args = ap.parse_args()
 
-    from benchmarks import (framework_costs, kernel_bench,
+    from benchmarks import (coded_train_bench, framework_costs, kernel_bench,
                             multireduce_compare, rebuild_bench, recover_bench,
                             serve_bench, stream_bench, table1_costs)
 
@@ -192,6 +196,7 @@ def main() -> None:
         "rebuild": rebuild_bench,
         "stream": stream_bench,
         "serve": serve_bench,
+        "coded": coded_train_bench,
     }
     subproc = {
         "mesh_encode": ("mesh_encode_bench.py", "mesh_encode/"),

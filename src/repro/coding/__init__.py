@@ -1,10 +1,33 @@
-"""Coding-layer wrappers over the unified `repro.api` encoder.
+"""Coded computation on top of the session/planner stack — ONE surface.
 
-Both coders plan their encodes through `Encoder.plan` (see
-`LagrangeComputer.encode_plan` / `GradientCoder.encode_plan`); the re-exports
-below are kept as the stable entry points for train/serve code.
+Every entry point here is a thin, memoized front onto `repro.api`
+(`CodedSystem` sessions, shared plan caches, drift/metrics hooks); the
+signatures are unified — construction takes shape parameters, `system()`
+takes keyword-only `backend=`/`q=` with the shared default
+(`default_backend(q)`: local kernel for F_65537, simulator otherwise).
+
+    GradientCoder(n_workers, s)       — Tandon-style gradient coding
+        .combine(worker_grads, alive) — exact full-batch gradient around
+                                        ≤ s stragglers (bitwise in float)
+        .decode_weights(alive)        — the 0/1 recovery vector (a @ B = 1)
+        .system(*, backend=, q=)      — field-quantized encode session
+        (training integration: repro.train.coded_step)
+
+    LagrangeComputer.build(field, K, N) — Lagrange coded computing (LCC)
+        .encode(x)                    — (K, W) -> (N, W) coded shards
+        .decode(deg, ids, results)    — any deg*(K-1)+1 results -> f(x_k),
+                                        via the cached decode-plan path
+        .system(*, backend=)          — the session behind encode/decode
+
+    CodedMatmul(K, R, backend=, q=)   — dropout-tolerant coded inference:
+        cm(X, W, dead=...)            — Y = X @ W exactly, ≤ R dropouts
+
+    coded_gradient(coder, grads, alive) — deprecated; GradientCoder.combine
 """
-from .gradient_code import GradientCoder, coded_gradient
+from .coded_matmul import CodedMatmul
+from .gradient_code import (FERMAT_Q, GradientCoder, coded_gradient,
+                            default_backend)
 from .lagrange_compute import LagrangeComputer
 
-__all__ = ["GradientCoder", "coded_gradient", "LagrangeComputer"]
+__all__ = ["GradientCoder", "LagrangeComputer", "CodedMatmul",
+           "coded_gradient", "default_backend", "FERMAT_Q"]

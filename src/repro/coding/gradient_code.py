@@ -10,16 +10,26 @@ full-batch gradient — no approximation, deterministic latency bound.
 
 This composes with the paper's collectives: on the mesh, the per-group sums
 are all-to-one reduces (Def. 3) and the decode is a masked cross-group
-reduce; `make_straggler_train_step` wires it into a jitted train step where
-straggler masks arrive as a per-step input.
+reduce; `repro.train.coded_step.make_straggler_train_step` wires it into a
+jitted train step where straggler masks arrive as a per-step input.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 import numpy as np
+
+FERMAT_Q = 65537
+
+
+def default_backend(q: int) -> str:
+    """The coding layer's shared backend default: the local uint32 kernel
+    for the Fermat prime, the exact simulator for every other field (the
+    jnp kernels are Fermat-only)."""
+    return "local" if q == FERMAT_Q else "simulator"
 
 
 @dataclass(frozen=True)
@@ -45,25 +55,37 @@ class GradientCoder:
             B[w, self.parts_for_worker(w)] = 1.0
         return B
 
-    def system(self, backend: str = "local", q: int = 65537):
+    def system(self, *, backend: str | None = None, q: int = FERMAT_Q):
         """`CodedSystem` session for the fractional-repetition encode.
 
         `system.encode(parts)` computes worker reports B @ parts over F_q —
         the field-quantized path for running gradient-code group sums
         through the decentralized encoder (sink r = worker r's report, so
         the session matrix is B^T).  Float training keeps using
-        `coded_gradient`; this is the integer/fixed-point route and the
-        mesh-backend schedule for it."""
+        `combine`; this is the integer/fixed-point route and the
+        mesh-backend schedule for it.
+
+        The session is memoized per (backend, q) — repeated calls reuse one
+        `CodedSystem` (and its planner-cache entries) instead of leaking a
+        fresh session per call.  Default backend: `default_backend(q)`.
+        """
         from ..api import CodedSystem, CodeSpec
 
-        spec = CodeSpec(kind="universal", K=self.n_workers, R=self.n_workers,
-                        q=q)
-        return CodedSystem(spec, backend=backend,
-                           A=self.encode_matrix().T.astype(np.int64))
+        if backend is None:
+            backend = default_backend(q)
+        key = f"_system_{backend}_{q}"
+        cached = self.__dict__.get(key)
+        if cached is None:
+            spec = CodeSpec(kind="universal", K=self.n_workers,
+                            R=self.n_workers, q=q)
+            cached = CodedSystem(spec, backend=backend,
+                                 A=self.encode_matrix().T.astype(np.int64))
+            object.__setattr__(self, key, cached)
+        return cached
 
-    def encode_plan(self, backend: str = "local", q: int = 65537):
-        """The planner-layer `EncodePlan` behind `system(backend, q)`."""
-        return self.system(backend, q).encode_plan
+    def encode_plan(self, *, backend: str | None = None, q: int = FERMAT_Q):
+        """The planner-layer `EncodePlan` behind `system(backend=..., q=...)`."""
+        return self.system(backend=backend, q=q).encode_plan
 
     def decode_weights(self, alive: np.ndarray) -> np.ndarray:
         """alive: (n,) bool. Returns a (n,) weight vector a with
@@ -77,14 +99,27 @@ class GradientCoder:
             a[live[0]] = 1.0
         return a
 
+    def combine(self, worker_grads: list, alive: np.ndarray):
+        """Combine per-worker (already group-summed) gradient pytrees into
+        the exact full-batch gradient; any ≤ s stragglers are decoded
+        around via `decode_weights` (>s per group raises loudly).
+
+        Selection is by the 0/1 weight vector on the host, so the
+        surviving terms enter the sum unscaled — recovery is bitwise-exact
+        in float, not just allclose."""
+        a = self.decode_weights(np.asarray(alive))
+        total = None
+        for w, g in enumerate(worker_grads):
+            if a[w] == 0 or g is None:
+                continue
+            total = g if total is None else jax.tree.map(jnp.add, total, g)
+        return jax.tree.map(lambda x: x / self.n_workers, total)
+
 
 def coded_gradient(coder: GradientCoder, worker_grads: list, alive: np.ndarray):
-    """Combine per-worker (already group-summed) gradients; exact recovery."""
-    a = coder.decode_weights(alive)
-    total = None
-    for w, g in enumerate(worker_grads):
-        if a[w] == 0 or g is None:
-            continue
-        scaled = jax.tree.map(lambda x: a[w] * x, g)
-        total = scaled if total is None else jax.tree.map(jnp.add, total, scaled)
-    return jax.tree.map(lambda x: x / coder.n_workers, total)
+    """Deprecated shim — use `GradientCoder.combine(worker_grads, alive)`."""
+    warnings.warn(
+        "coded_gradient() is deprecated; use "
+        "GradientCoder.combine(worker_grads, alive)",
+        DeprecationWarning, stacklevel=2)
+    return coder.combine(worker_grads, alive)

@@ -1,0 +1,80 @@
+"""Coded-inference checks on the mesh backend, 8 forced host devices
+(subprocess companion of test_coding.py — jax locks the device count at
+first init).
+
+The tentpole claim, end to end: a layer matmul Y = X @ W runs
+Lagrange-coded through `CodedMatmul`'s `CodedSystem` session on the MESH
+backend, and the decode (the existing `recover/` stack) recovers Y
+bitwise-exactly around every dropout count 0..R — including the full-R
+patterns — with parity against the local kernel and the simulator oracle.
+A deg-2 `LagrangeComputer.decode` leg exercises the shared decode-plan
+routing on the mesh as well.
+
+Prints 'CODED_MESH_CHECKS_OK' on success; any assertion failure is fatal.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=8 "
+    + os.environ.get("XLA_FLAGS", "")
+)
+
+import numpy as np
+
+from repro.coding import CodedMatmul, LagrangeComputer
+from repro.core.field import FERMAT
+
+rng = np.random.default_rng(7)
+K, R, b, d, out = 8, 4, 2, 16, 6  # mesh: R | K, K <= 8 devices
+
+X = FERMAT.rand((K * b, d), rng)
+W = FERMAT.rand((d, out), rng)
+truth = FERMAT.matmul(X, W)
+
+systems = {backend: CodedMatmul(K, R, backend=backend)
+           for backend in ("simulator", "local", "mesh")}
+mesh = systems["mesh"]
+shards = mesh.encode(X)
+assert np.array_equal(shards[:K].reshape(K * b, d), X % FERMAT.q), \
+    "systematic data shards"
+results = mesh.worker_compute(shards, W)
+
+for nd in range(R + 1):
+    patterns = [rng.choice(K + R, size=nd, replace=False) for _ in range(3)]
+    if nd == R:
+        patterns.append(np.arange(R))          # all parity down
+        patterns.append(np.arange(K - R, K))   # R data shards down
+    for dead in patterns:
+        got = {name: cm.decode(results, dead=dead)
+               for name, cm in systems.items()}
+        for name, Y in got.items():
+            assert np.array_equal(Y, truth), (name, nd, sorted(dead))
+        assert not mesh.system.failed
+    print(f"dropouts={nd}: mesh decode bitwise-exact "
+          f"(== local == simulator), {len(patterns)} patterns")
+for cm in systems.values():
+    cm.close()
+
+# LCC polynomial decode (deg 2) through the shared decode-plan path on the
+# mesh: the virtual spec has K_spec = T = 2*(K-1)+1 <= 8 devices for K=4
+lcc = LagrangeComputer.build(FERMAT, K=4, N=12)
+x = FERMAT.rand((4, 5), rng)
+res = FERMAT.add(FERMAT.mul(lcc.encode(x), lcc.encode(x)), 3)
+want = FERMAT.add(FERMAT.mul(x % FERMAT.q, x % FERMAT.q), 3)
+T = lcc.recovery_threshold(2)
+
+from repro.recover.planner import Decoder
+
+spec, A = lcc._decode_spec(2)
+ids = np.sort(rng.choice(12, size=T + 2, replace=False))
+live = set(int(w) for w in ids)
+erased = tuple(range(4)) + tuple(4 + n for n in range(12) if n not in live)
+plan = Decoder.plan(spec, erased, backend="mesh", A=A)
+v = np.stack([res[pos - 4] for pos in plan.kept])  # res rows are worker ids
+dec = plan.run(v)[:4]
+assert np.array_equal(dec, want), "mesh LCC decode"
+assert np.array_equal(dec, lcc.decode(2, ids, res[ids])), "mesh == local LCC"
+print(f"LCC deg-2 decode on mesh: T={T}, {12 - len(live)} dead workers, "
+      "bitwise == local plan path")
+
+print("CODED_MESH_CHECKS_OK")

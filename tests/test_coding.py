@@ -1,0 +1,303 @@
+"""Coded computation: gradient coding, LCC decode routing, coded matmul,
+the straggler-tolerant train step, and the unified coding-layer API."""
+import inspect
+
+import jax
+import numpy as np
+import pytest
+
+from repro.api import Encoder
+from repro.coding import (CodedMatmul, GradientCoder, LagrangeComputer,
+                          coded_gradient, default_backend)
+from repro.configs import get_config
+from repro.core.field import FERMAT, Field
+from repro.data import SyntheticLM
+from repro.recover.planner import Decoder
+from repro.train import (StragglerInjector, init_state,
+                         make_straggler_train_step, make_train_setup,
+                         make_train_step)
+
+RNG = np.random.default_rng(0)
+KEY = jax.random.PRNGKey(0)
+
+
+# ---------------- group assignment / decode_weights -------------------------
+
+@pytest.mark.parametrize("n,s", [(6, 1), (6, 2), (8, 3), (4, 0)])
+def test_group_assignment_invariants(n, s):
+    gc = GradientCoder(n, s)
+    B = gc.encode_matrix()
+    # every part covered by exactly its group's s+1 workers
+    assert np.array_equal(B.sum(axis=0), np.full(n, s + 1))
+    for w in range(n):
+        parts = gc.parts_for_worker(w)
+        assert len(parts) == s + 1
+        assert all(p // (s + 1) == w // (s + 1) for p in parts)
+    # any alive mask with <= s stragglers decodes: a @ B == ones
+    for trial in range(10):
+        dead = RNG.choice(n, size=RNG.integers(0, s + 1), replace=False)
+        alive = np.array([w not in dead for w in range(n)])
+        a = gc.decode_weights(alive)
+        assert np.array_equal(a @ B, np.ones(n))
+        assert np.all(a[~alive] == 0)
+
+
+def test_decode_weights_group_wipeout_is_loud():
+    gc = GradientCoder(6, s=1)
+    alive = np.ones(6, bool)
+    alive[[2, 3]] = False  # both members of group 1
+    with pytest.raises(RuntimeError, match="group 1 fully straggled"):
+        gc.decode_weights(alive)
+
+
+def test_combine_exact_and_deprecated_shim():
+    gc = GradientCoder(6, s=1)
+    parts = [{"g": np.float32(RNG.standard_normal(4))} for _ in range(6)]
+    reports = [{"g": sum(parts[i]["g"] for i in gc.parts_for_worker(w))}
+               for w in range(6)]
+    full = gc.combine(reports, np.ones(6, bool))
+    for dead in [{0}, {1, 4}, {5}]:
+        alive = np.array([w not in dead for w in range(6)])
+        out = gc.combine(reports, alive)
+        # bitwise, not allclose: survivors enter the sum unscaled
+        assert np.array_equal(np.asarray(out["g"]), np.asarray(full["g"]))
+    with pytest.deprecated_call():
+        out = coded_gradient(gc, reports, np.ones(6, bool))
+    assert np.array_equal(np.asarray(out["g"]), np.asarray(full["g"]))
+
+
+# ---------------- unified API surface ---------------------------------------
+
+def test_unified_signature_contract():
+    # both coders: keyword-only system(*, backend=..., ...) with the
+    # shared default_backend(q) resolution
+    for cls, meth in [(GradientCoder, "system"), (GradientCoder, "encode_plan"),
+                      (LagrangeComputer, "system"),
+                      (LagrangeComputer, "encode_plan")]:
+        sig = inspect.signature(getattr(cls, meth))
+        for p in list(sig.parameters.values())[1:]:
+            assert p.kind is inspect.Parameter.KEYWORD_ONLY, (cls, meth, p)
+        assert sig.parameters["backend"].default is None, (cls, meth)
+    gc = GradientCoder(4, s=1)
+    with pytest.raises(TypeError):
+        gc.system("local")  # positional backend is gone
+    assert gc.system().backend == "local"  # default_backend(65537)
+    assert default_backend(65537) == "local"
+    assert default_backend(97) == "simulator"
+    lcc = LagrangeComputer.build(Field(97), K=3, N=6)
+    assert lcc.system().backend == "simulator"
+
+
+def test_encode_plan_session_is_cached_no_leak():
+    gc = GradientCoder(8, s=1)
+    before = Encoder.cache_info()
+    s1 = gc.system()
+    p1 = gc.encode_plan()
+    for _ in range(20):
+        assert gc.system() is s1           # one session, not one per call
+        assert gc.encode_plan() is p1
+    after = Encoder.cache_info()
+    # 20 repeat calls added at most the one initial plan entry
+    assert after["plans"] - before["plans"] <= 1
+
+
+# ---------------- LCC decode via the shared decode-plan path ----------------
+
+@pytest.mark.parametrize("deg", [1, 2, 3])
+def test_lcc_decode_random_subsets_and_host_parity(deg):
+    f = FERMAT
+    lcc = LagrangeComputer.build(f, K=4, N=12)
+    x = f.rand((4, 3), np.random.default_rng(deg))
+
+    def poly(v):
+        out = v
+        for _ in range(deg - 1):
+            out = f.mul(out, v)
+        return f.add(out, 7)
+
+    results = poly(lcc.encode(x))
+    T = lcc.recovery_threshold(deg)
+    truth = poly(x)
+    for trial in range(5):
+        n_live = int(RNG.integers(T, lcc.N + 1))
+        ids = RNG.permutation(lcc.N)[:n_live]  # unsorted, random subset
+        dec = lcc.decode(deg, ids, results[ids])
+        assert np.array_equal(dec, truth)
+        host = lcc._decode_host(deg, ids, results[ids])
+        assert np.array_equal(host, dec)  # plan path == host fallback
+
+
+def test_lcc_decode_hits_shared_plan_cache():
+    f = FERMAT
+    lcc = LagrangeComputer.build(f, K=4, N=12)
+    x = f.rand((4, 2), np.random.default_rng(1))
+    results = f.mul(lcc.encode(x), 5)
+    ids = np.arange(12)[2:]  # drop workers 0, 1
+    lcc.decode(1, ids, results[ids])
+    before = Decoder.cache_info()
+    lcc.decode(1, ids, results[ids])
+    after = Decoder.cache_info()
+    assert after["plan_hits"] > before["plan_hits"]
+    assert after["plans"] == before["plans"]
+
+
+def test_lcc_decode_insufficient_workers():
+    lcc = LagrangeComputer.build(FERMAT, K=4, N=12)
+    T = lcc.recovery_threshold(2)
+    with pytest.raises(AssertionError):
+        lcc.decode(2, np.arange(T - 1), np.zeros((T - 1, 2), np.int64))
+
+
+# ---------------- coded inference (CodedMatmul) ------------------------------
+
+def test_coded_matmul_all_dropout_counts_bitwise():
+    K, R, b, d, out = 4, 2, 2, 8, 3
+    X = FERMAT.rand((K * b, d), RNG)
+    W = FERMAT.rand((d, out), RNG)
+    truth = FERMAT.matmul(X, W)
+    with CodedMatmul(K, R) as cm:
+        for nd in range(R + 1):
+            dead = RNG.choice(K + R, size=nd, replace=False)
+            assert np.array_equal(cm(X, W, dead=dead), truth)
+        with pytest.raises(ValueError, match="exceed R"):
+            cm(X, W, dead=range(R + 1))
+        assert not cm.system.failed  # decode heals back to healthy
+
+
+def test_coded_matmul_backend_parity():
+    K, R = 4, 2
+    X = FERMAT.rand((K * 2, 6), RNG)
+    W = FERMAT.rand((6, 4), RNG)
+    with CodedMatmul(K, R) as loc, \
+            CodedMatmul(K, R, backend="simulator") as sim:
+        got_l = loc(X, W, dead=[1, 5])
+        got_s = sim(X, W, dead=[1, 5])
+    assert np.array_equal(got_l, got_s)
+
+
+# ---------------- straggler-tolerant train step ------------------------------
+
+@pytest.fixture(scope="module")
+def tiny_train():
+    cfg = get_config("qwen3_1_7b").smoke()
+    opt, _ = make_train_setup(cfg, total_steps=20, peak_lr=5e-3)
+    state = init_state(cfg, KEY, opt)
+    batch = SyntheticLM(cfg.vocab, 16, 8).device_batch(0)
+    return cfg, opt, state, batch
+
+
+def _trees_equal(a, b):
+    return all(np.array_equal(np.asarray(x), np.asarray(y))
+               for x, y in zip(jax.tree.leaves(a), jax.tree.leaves(b)))
+
+
+def test_coded_step_bitwise_recovery(tiny_train):
+    cfg, opt, state, batch = tiny_train
+    coder = GradientCoder(4, s=1)
+    step = make_straggler_train_step(cfg, opt, coder)
+    ref_state, ref_m = step(state, batch)  # all alive
+    for dead in [{0}, {1}, {3}, {0, 2}]:
+        if len(dead) > coder.s:
+            continue
+        alive = np.array([w not in dead for w in range(4)])
+        got_state, got_m = step(state, batch, alive)
+        assert _trees_equal(got_state.params, ref_state.params)
+        assert got_m["stragglers"] == len(dead)
+    # two stragglers in distinct groups with s=2 coding
+    coder2 = GradientCoder(6, s=2)
+    step2 = make_straggler_train_step(cfg, opt, coder2)
+    batch6 = SyntheticLM(cfg.vocab, 16, 12).device_batch(0)
+    ref6, _ = step2(state, batch6)
+    alive = np.ones(6, bool)
+    alive[[0, 4]] = False
+    got6, _ = step2(state, batch6, alive)
+    assert _trees_equal(got6.params, ref6.params)
+
+
+def test_coded_step_close_to_uncoded_step(tiny_train):
+    cfg, opt, state, batch = tiny_train
+    coder = GradientCoder(4, s=1)
+    coded = make_straggler_train_step(cfg, opt, coder)
+    plain = jax.jit(make_train_step(cfg, opt))
+    s1, m1 = coded(state, batch)
+    s2, m2 = plain(state, batch)
+    # different reduction association (per-part vs whole-batch), so
+    # allclose, not bitwise
+    np.testing.assert_allclose(float(m1["loss"]), float(m2["loss"]),
+                               rtol=1e-5)
+    for a, b in zip(jax.tree.leaves(s1.params), jax.tree.leaves(s2.params)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+def test_coded_step_guards(tiny_train):
+    cfg, opt, state, batch = tiny_train
+    coder = GradientCoder(4, s=1)
+    step = make_straggler_train_step(cfg, opt, coder)
+    alive = np.ones(4, bool)
+    alive[[0, 1]] = False  # wipes group 0
+    with pytest.raises(RuntimeError, match="fully straggled"):
+        step(state, batch, alive)
+    bad_batch = SyntheticLM(cfg.vocab, 16, 6).device_batch(0)  # 6 % 4 != 0
+    with pytest.raises(ValueError, match="not divisible"):
+        step(state, bad_batch)
+    with pytest.raises(ValueError, match="alive must be"):
+        step(state, batch, np.ones(5, bool))
+
+
+def test_coded_step_metrics_and_trace(tiny_train):
+    from repro.obs import metrics, trace
+
+    cfg, opt, state, batch = tiny_train
+    coder = GradientCoder(4, s=1)
+    step = make_straggler_train_step(cfg, opt, coder)
+    tracer = trace.Tracer()
+    trace.install(tracer)
+    try:
+        before = metrics.REGISTRY.snapshot()
+        alive = np.ones(4, bool)
+        alive[2] = False
+        step(state, batch, alive)
+        after = metrics.REGISTRY.snapshot()
+        spans = tracer.events(cat="train.step")
+    finally:
+        trace.uninstall(tracer)
+    assert spans and spans[-1]["args"]["stragglers"] == [2]
+
+    def total(snap, name):
+        return sum(snap.get(name, {}).get("values", {}).values())
+
+    assert total(after, "coded_train_steps_total") == \
+        total(before, "coded_train_steps_total") + 1
+    assert total(after, "coded_train_stragglers_total") == \
+        total(before, "coded_train_stragglers_total") + 1
+    hist = after.get("coded_train_step_us", {}).get("values", {})
+    assert any(v["count"] >= 1 for v in hist.values())
+
+
+# ---------------- StragglerInjector ------------------------------------------
+
+@pytest.mark.parametrize("mode", ["random", "bursty", "fixed"])
+def test_straggler_injector_masks_decodable(mode):
+    coder = GradientCoder(6, s=2)
+    inj = StragglerInjector.build(mode, coder, steps=40, rate=0.8, seed=3)
+    n_straggled_steps = 0
+    for t in range(40):
+        mask = inj.mask(t)
+        coder.decode_weights(mask)  # never raises: patterns keep <= s
+        assert (~mask).sum() <= coder.s
+        n_straggled_steps += int(not mask.all())
+    assert n_straggled_steps > 0  # rate=0.8 over 40 steps must fire
+    # the plan is registered through FaultInjector (the chaos tooling)
+    assert inj.plan and all(0 <= w < 6 for _, w in inj.plan)
+    assert inj.injector.net.pending_kills  # lives on a real RoundNetwork
+
+
+def test_straggler_injector_fixed_and_bounds():
+    coder = GradientCoder(6, s=1)
+    inj = StragglerInjector.fixed(coder, steps=5, workers=[4])
+    for t in range(5):
+        assert list(np.flatnonzero(~inj.mask(t))) == [4]
+    with pytest.raises(ValueError, match="exceed tolerance"):
+        StragglerInjector.fixed(coder, steps=5, workers=[0, 1])
+    with pytest.raises(ValueError, match="unknown straggler mode"):
+        StragglerInjector.build("flaky", coder, steps=5)

@@ -9,7 +9,7 @@ import pytest
 from conftest_hypothesis import given, settings, st
 
 from repro.ckpt import CodedCheckpointer
-from repro.coding import GradientCoder, LagrangeComputer, coded_gradient
+from repro.coding import GradientCoder, LagrangeComputer
 from repro.configs import get_config
 from repro.core.field import FERMAT
 from repro.data import SyntheticLM
@@ -197,7 +197,7 @@ def test_gradient_coder_all_straggler_patterns():
         groups_hit = {w // 2 for w in dead}
         if any(sum(1 for w in dead if w // 2 == g) > 1 for g in groups_hit):
             continue  # > s per group: not covered
-        out = coded_gradient(gc, worker_out, alive)
+        out = gc.combine(worker_out, alive)
         np.testing.assert_allclose(np.asarray(out["g"]), np.asarray(expected))
 
 
