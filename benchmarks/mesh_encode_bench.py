@@ -27,6 +27,7 @@ def main():
     f = FERMAT
     N, R, W = 8, 4, 4096
     x = jnp.asarray(f.rand((N, W), np.random.default_rng(0)).astype(np.uint32))
+    bytes_of, all_ok = {}, 1
     for method in ("universal", "rs"):
         spec = CodeSpec(kind="rs", K=N, R=R, p=1, W=W)
         plan = Encoder.plan(spec, backend="mesh", method=method)
@@ -38,9 +39,18 @@ def main():
         y = plan.run(np.asarray(x, np.int64))  # execute once for correctness
         ok = np.array_equal(y, f.matmul(plan.A.T, np.asarray(x, np.int64)))
         c = plan.cost()
+        bytes_of[method] = census["collective_bytes"]
+        all_ok &= int(ok)
         print(f"mesh_encode/{method}_N{N}_R{R}_W{W},{us:.0f},"
               f"collective_bytes={census['collective_bytes']:.0f};"
               f"model_C1={c.C1};model_C2={c.C2};correct={int(ok)}")
+    # stable (HLO-census, no wall clock) rows for the gated mesh/* section
+    print(f"mesh/encode_bytes_gain_K{N}_R{R}_W{W},"
+          f"{bytes_of['rs'] / bytes_of['universal']:.3f},"
+          f"rs_bytes={bytes_of['rs']:.0f};"
+          f"universal_bytes={bytes_of['universal']:.0f};backend=mesh")
+    print(f"mesh/encode_ok_K{N}_R{R}_W{W},{all_ok},both schedules bitwise "
+          f"vs the dense matmul;backend=mesh")
 
 
 if __name__ == "__main__":

@@ -48,8 +48,14 @@ Sections:
                    step time vs injected straggler count (gated ratio +
                    bitwise-recovery flag) and the Lagrange-coded matmul
                    dropout sweep (benchmarks/coded_train_bench.py)
+  topo/*         — hierarchical topology: per-placement inter-tier traffic,
+                   affinity-vs-flat crossover ratio, tier-model exactness
+                   (benchmarks/topo_bench.py; deterministic, tightly gated)
   mesh_encode/*  — lowered-HLO collective bytes, universal vs RS (subprocess)
   mesh_a2a/*     — mesh A2A scaling (subprocess)
+  mesh/*         — the stable (HLO-census, no wall clock) rows of BOTH mesh
+                   subprocess benches, folded into one gated section; the
+                   section name "mesh" runs both scripts
   roofline/*     — coding-kernel fraction-of-roofline cells (NTT + dense
                    local encode vs the host's memcpy ceiling, fed by the
                    metrics registry) + dry-run cells if results/dryrun
@@ -185,7 +191,8 @@ def main() -> None:
 
     from benchmarks import (coded_train_bench, framework_costs, kernel_bench,
                             multireduce_compare, rebuild_bench, recover_bench,
-                            serve_bench, stream_bench, table1_costs)
+                            serve_bench, stream_bench, table1_costs,
+                            topo_bench)
 
     inproc = {
         "table1": table1_costs,
@@ -197,17 +204,20 @@ def main() -> None:
         "stream": stream_bench,
         "serve": serve_bench,
         "coded": coded_train_bench,
+        "topo": topo_bench,
     }
+    # each script also prints stable mesh/* rows, gated as one "mesh" section
     subproc = {
-        "mesh_encode": ("mesh_encode_bench.py", "mesh_encode/"),
-        "mesh_a2a": ("mesh_a2a_scale.py", "mesh_a2a/"),
+        "mesh_encode": ("mesh_encode_bench.py", ("mesh_encode/", "mesh/")),
+        "mesh_a2a": ("mesh_a2a_scale.py", ("mesh_a2a/", "mesh/")),
     }
     wanted = args.sections
     if wanted is not None:
-        unknown = set(wanted) - set(inproc) - set(subproc) - {"roofline"}
+        known = set(inproc) | set(subproc) | {"roofline", "mesh"}
+        unknown = set(wanted) - known
         if unknown:
             raise SystemExit(f"unknown sections: {sorted(unknown)} "
-                             f"(have {sorted(inproc) + sorted(subproc) + ['roofline']})")
+                             f"(have {sorted(known)})")
 
     def on(name: str) -> bool:
         return wanted is None or name in wanted
@@ -224,19 +234,19 @@ def main() -> None:
     env = dict(os.environ)
     env["PYTHONPATH"] = str(Path(__file__).resolve().parent.parent / "src")
     env.pop("XLA_FLAGS", None)
-    for name, (script, prefix) in subproc.items():
-        if not on(name):
+    for name, (script, prefixes) in subproc.items():
+        if not (on(name) or on("mesh")):
             continue
         proc = subprocess.run(
             [sys.executable, str(Path(__file__).resolve().parent / script)],
             capture_output=True, text=True, env=env, timeout=1200)
         for line in proc.stdout.splitlines():
-            if line.startswith(prefix):
+            if line.startswith(prefixes):
                 _emit(line, acc)
         if proc.returncode != 0:
             # failure is visible in the CSV and fails the run; it is NOT
             # recorded in the JSON artifact as a fake 0us measurement
-            print(f"{prefix}FAILED,0,rc={proc.returncode}", flush=True)
+            print(f"{prefixes[0]}FAILED,0,rc={proc.returncode}", flush=True)
             failed.append(name)
 
     if on("roofline"):

@@ -1,0 +1,106 @@
+"""Topology perf cells: what does placement buy on a hierarchical fleet?
+
+One scenario — rs K=16 R=4 W=64 on a Topology(5 hosts x 4 devices) —
+priced under a two-tier link model while sweeping the inter/intra
+bandwidth ratio.  The rows are model/simulator quantities (exact, no
+wall clock), so the gate can pin them tightly:
+
+  * per-placement inter-tier C2 (elems that cross the host network),
+    measured by the round simulator and asserted == the closed form;
+  * the affinity-vs-flat inter-traffic ratio (the "what the network
+    saves" headline);
+  * the crossover ratio: the smallest swept inter/intra cost ratio at
+    which the affinity placement's best schedule is strictly cheaper
+    than the flat round-robin's (at ratio 1 the tiers price equally, so
+    placement cannot matter);
+  * a strictly-cheaper flag at ratio 4 (the paper-style "fast intra
+    fabric" regime).
+
+All rows are deterministic; drift here means the placement logic or the
+per-tier accounting changed, not the machine.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "src"))
+
+import numpy as np
+
+from repro.api import (CodeSpec, Encoder, TieredLinkModel, Topology, place,
+                       tiered_encode_cost)
+
+K, R, W = 16, 4, 64
+RATIOS = (1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 8.0)
+
+
+def _tiers(spec, placement, link):
+    """(method, TieredCost) of the auto-selected schedule under `link`."""
+    plan = Encoder.plan(spec, backend="simulator", topology=placement,
+                        link=link)
+    return plan.method, plan.tiered_cost()
+
+
+def rows():
+    spec = CodeSpec(kind="rs", K=K, R=R, W=W)
+    topo = Topology(hosts=5, devices_per_host=4)
+    placements = {pol: place(spec, topo, pol) for pol in ("affinity", "flat")}
+
+    # measured per-tier split at ratio 4, cross-checked against the form
+    link4 = TieredLinkModel.from_ratio(4.0)
+    inter_c2 = {}
+    exact = 1
+    for pol, pl in placements.items():
+        plan = Encoder.plan(spec, backend="simulator", topology=pl,
+                            link=link4)
+        x = spec.field.rand((K, W), np.random.default_rng(0))
+        plan.run(x)
+        measured = plan.sim_net.by_tier()
+        tc = plan.tiered_cost()
+        model = {"intra": (tc.intra.C1, tc.intra.C2),
+                 "inter": (tc.inter.C1, tc.inter.C2)}
+        if measured != model:
+            exact = 0
+        inter_c2[pol] = measured["inter"][1]
+        yield (f"topo/{pol}_inter_c2_K{K}_R{R}_W{W},{inter_c2[pol]},"
+               f"method={plan.method};intra_c2={measured['intra'][1]};"
+               f"model_inter_c2={model['inter'][1]};backend=simulator")
+    yield (f"topo/tiers_exact_K{K}_R{R}_W{W},{exact},"
+           f"model==measured per tier, both placements;backend=simulator")
+    yield (f"topo/inter_c2_ratio_K{K}_R{R}_W{W},"
+           f"{inter_c2['flat'] / inter_c2['affinity']:.3f},"
+           f"flat={inter_c2['flat']};affinity={inter_c2['affinity']};"
+           f"backend=simulator")
+
+    # ratio sweep: price each placement's best schedule, find the crossover
+    crossover = 0.0
+    cheaper_at_4 = 0
+    for ratio in RATIOS:
+        link = TieredLinkModel.from_ratio(ratio)
+        us = {}
+        for pol, pl in placements.items():
+            method, tc = _tiers(spec, pl, link)
+            if tc is None:  # closed form declined: price flat (conservative)
+                tc = tiered_encode_cost(spec, method, pl)
+            us[pol] = link.us(tc)
+        if us["affinity"] < us["flat"] and crossover == 0.0:
+            crossover = ratio
+        if ratio == 4.0:
+            cheaper_at_4 = int(us["affinity"] < us["flat"])
+            yield (f"topo/affinity_us_r4_K{K}_R{R}_W{W},"
+                   f"{us['affinity']:.2f},flat_us={us['flat']:.2f};"
+                   f"backend=simulator")
+    yield (f"topo/crossover_ratio_K{K}_R{R},{crossover},"
+           f"smallest swept inter/intra ratio with affinity strictly "
+           f"cheaper;sweep={'/'.join(str(r) for r in RATIOS)};"
+           f"backend=simulator")
+    yield (f"topo/affinity_cheaper_r4_K{K}_R{R},{cheaper_at_4},"
+           f"affinity strictly cheaper than flat at ratio 4;"
+           f"backend=simulator")
+
+
+if __name__ == "__main__":
+    print("name,us_per_call,derived")
+    for row in rows():
+        print(row)

@@ -29,6 +29,14 @@ Plans execute on any registered backend with bitwise-identical results;
 tables are cached per spec and shared between the encode and decode
 stacks; `cache_clear()` below clears both sides coherently.
 """
+from ..topo import (
+    Placement,
+    TieredCost,
+    TieredLinkModel,
+    Topology,
+    place,
+    tiered_encode_cost,
+)
 from .planner import ALPHA_DEFAULT, BETA_BITS_DEFAULT, EncodePlan, Encoder, method_costs
 from .registry import (
     Backend,
@@ -50,6 +58,8 @@ __all__ = [
     "register_backend", "unregister_backend", "get_backend",
     "available_backends",
     "StreamStats", "default_chunk_w",
+    "Topology", "TieredLinkModel", "TieredCost",
+    "Placement", "place", "tiered_encode_cost",
     "cache_clear", "cache_info",
     "ALPHA_DEFAULT", "BETA_BITS_DEFAULT",
 ]

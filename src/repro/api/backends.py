@@ -33,16 +33,18 @@ def run_simulator(plan, x: np.ndarray) -> tuple[np.ndarray, RoundNetwork]:
     (sink values, the network with its measured C1/C2)."""
     spec, f = plan.spec, plan.field
     x = f.arr(x)
+    pl = getattr(plan, "placement", None)
     if spec.kind == "dft":
-        net = RoundNetwork(spec.K, spec.p)
+        net = RoundNetwork(spec.K, spec.p, placement=pl)
         out: dict[int, np.ndarray] = {}
         net.run(dft_a2a(f, {k: x[k] for k in range(spec.K)},
                         list(range(spec.K)), spec.p, spec.P, out))
         y = np.stack([out[k] for k in range(spec.K)])
     else:
         method = "rs" if plan.method == "rs" else "universal"
+        net = RoundNetwork(spec.N, spec.p, placement=pl)
         y, net = decentralized_encode(f, plan.A, x, p=spec.p, method=method,
-                                      sgrs=plan.sgrs)
+                                      sgrs=plan.sgrs, net=net)
     return np.asarray(y, np.int64), net
 
 
@@ -102,28 +104,48 @@ def _require_devices(n: int):
     return devs[:n]
 
 
+def _mesh_axes(plan, devs):
+    """(Mesh, axis_name, PartitionSpec) for the plan: the flat K-device
+    "enc" axis, or — when the plan carries a multi-host topology whose
+    host count divides K — a (hosts x K/hosts) grid in host-major device
+    order with a `TieredAxis` axis name, so every schedule round lowers
+    onto its own tier's ppermute leg (see `core.shardmap_exec`).  Shard
+    layout is identical either way (device k still holds source k), so
+    outputs are bitwise-equal to the flat mesh."""
+    from jax.sharding import Mesh, PartitionSpec as P
+
+    from ..core.shardmap_exec import TieredAxis
+
+    topo = getattr(plan, "topology", None)
+    K = plan.spec.K
+    if topo is not None and 1 < topo.hosts <= K and K % topo.hosts == 0:
+        axis = TieredAxis(topo.hosts, K // topo.hosts)
+        mesh = Mesh(np.array(devs).reshape(axis.hosts, axis.dph), axis.axes)
+        return mesh, axis, P(axis.axes)
+    return Mesh(np.array(devs), ("enc",)), "enc", P("enc")
+
+
 def build_mesh_callable(plan):
     """Jitted global-array function (K, W) uint32 -> (K, W) uint32 running
     the plan's schedule under shard_map on the first K devices.  Device k
     holds source k; after the call devices 0..R-1 hold the sink values."""
     import jax
     import jax.numpy as jnp
-    from jax.sharding import Mesh, PartitionSpec as P
 
     from ..core.parity import mesh_parity_encode
     from ..core.shardmap_exec import mesh_dft, shard_map
 
     spec = plan.spec
     devs = _require_devices(spec.K)
-    mesh = Mesh(np.array(devs), ("enc",))
+    mesh, axis, pspec = _mesh_axes(plan, devs)
 
     if spec.kind == "dft":
         t = plan.tables.dft_mesh_tables()
 
         @partial(shard_map, mesh=mesh,
-                 in_specs=(P("enc"), P("enc"), P("enc")), out_specs=P("enc"))
+                 in_specs=(pspec, pspec, pspec), out_specs=pspec)
         def step(xb, ca, cb):
-            return mesh_dft(xb[0], ca[0], cb[0], t, "enc")[None]
+            return mesh_dft(xb[0], ca[0], cb[0], t, axis)[None]
 
         args = (jnp.asarray(t.ca.T), jnp.asarray(t.cb.T))
         return jax.jit(lambda xg: step(xg, *args))
@@ -137,11 +159,11 @@ def build_mesh_callable(plan):
     keys = list(arrs)
 
     @partial(shard_map, mesh=mesh,
-             in_specs=(P("enc"),) + tuple(P("enc") for _ in keys),
-             out_specs=P("enc"))
+             in_specs=(pspec,) + tuple(pspec for _ in keys),
+             out_specs=pspec)
     def step(xb, *tb):
         rows = {k: v[0] for k, v in zip(keys, tb)}
-        return mesh_parity_encode(xb[0], rows, t, "enc")[None]
+        return mesh_parity_encode(xb[0], rows, t, axis)[None]
 
     args = tuple(jnp.asarray(arrs[k]) for k in keys)
     return jax.jit(lambda xg: step(xg, *args))

@@ -36,6 +36,8 @@ from ..core.cauchy import StructuredGRS, cost_cauchy
 from ..core.cost_model import LinearCost
 from ..core.dft_a2a import cost_dft
 from ..core.field import Field
+from ..topo import (Placement, TieredCost, TieredLinkModel, Topology,
+                    n_procs as topo_n_procs, place, tiered_encode_cost)
 from .backends import build_mesh_callable
 from .registry import PlanStats, get_backend
 from .spec import CodeSpec
@@ -156,15 +158,27 @@ def method_costs(spec: CodeSpec, sgrs: StructuredGRS | None) -> dict[str, Linear
     return out
 
 
-def _resolve_method(spec: CodeSpec, sgrs: StructuredGRS | None, method: str
+def _resolve_method(spec: CodeSpec, sgrs: StructuredGRS | None, method: str,
+                    placement: Placement | None = None, link=None
                     ) -> tuple[str, dict[str, LinearCost]]:
     costs = method_costs(spec, sgrs)
     if method == "auto":
         # argmin of the linear cost (W already folded into each C2);
-        # specific schedule wins exact ties
-        chosen = min(costs, key=lambda m: (
-            costs[m].total(ALPHA_DEFAULT, BETA_BITS_DEFAULT),
-            m == "universal"))
+        # specific schedule wins exact ties.  Under a placement and a
+        # tiered link model, each method is priced by its per-tier split
+        # (flat fallback when the closed form doesn't apply) — topology
+        # can flip the choice when one schedule keeps more traffic intra.
+        if placement is not None and isinstance(link, TieredLinkModel):
+            def _score(m: str) -> float:
+                tc = tiered_encode_cost(spec, m, placement, sgrs=sgrs)
+                return link.us(tc if tc is not None else costs[m])
+        elif link is not None:
+            def _score(m: str) -> float:
+                return link.us(costs[m])
+        else:
+            def _score(m: str) -> float:
+                return costs[m].total(ALPHA_DEFAULT, BETA_BITS_DEFAULT)
+        chosen = min(costs, key=lambda m: (_score(m), m == "universal"))
         return chosen, costs
     if method not in costs:
         raise ValueError(
@@ -196,6 +210,12 @@ class EncodePlan(PlanStats):
     method: str
     tables: HostTables
     costs: dict[str, LinearCost]
+    # hierarchical-topology context (see repro.topo): placement drives the
+    # simulator's per-tier accounting, topology the hierarchical mesh grid,
+    # link the tiered pricing in describe()/auto selection
+    placement: Placement | None = None
+    topology: Topology | None = None
+    link: Any = None
     _mesh_fn: Callable | None = None
     _local_fn: Callable | None = None
     # thread-local per-run stats storage (PlanStats reads/writes this)
@@ -284,6 +304,16 @@ class EncodePlan(PlanStats):
         """(C1, C2) of the chosen schedule per the Table-I cost model."""
         return self.costs[self.method]
 
+    def tiered_cost(self) -> TieredCost | None:
+        """Exact per-tier (intra, inter) split of `cost()` under the plan's
+        placement; None without a placement or when the placement has no
+        closed form (the simulator's measured `sim_net.by_tier()` still
+        applies)."""
+        if self.placement is None:
+            return None
+        return tiered_encode_cost(self.spec, self.method, self.placement,
+                                  sgrs=self.sgrs)
+
     def mesh_callable(self):
         """The jitted shard_map executable (mesh backend only): global
         (K, W) uint32 -> (K, W) uint32; kept for the plan's lifetime."""
@@ -306,6 +336,19 @@ class EncodePlan(PlanStats):
             f"(model C ~ {model_us:.1f} us)",
             f"  tables  : cached, key={s.table_key()}",
         ]
+        if self.topology is not None:
+            t = self.topology
+            pol = self.placement.policy if self.placement else "none"
+            lines.append(f"  topo    : {t.hosts} hosts x "
+                         f"{t.devices_per_host} devices, placement={pol}")
+            tc = self.tiered_cost()
+            if tc is not None:
+                us = (self.link.us(tc)
+                      if isinstance(self.link, TieredLinkModel) else None)
+                lines.append(
+                    f"  tiers   : intra C1={tc.intra.C1} C2={tc.intra.C2} | "
+                    f"inter C1={tc.inter.C1} C2={tc.inter.C2}"
+                    + (f" (model C ~ {us:.1f} us)" if us is not None else ""))
         if self.backend == "local":
             impl = ("O(K log K) NTT fast path" if self.local_impl == "ntt"
                     else "Pallas/jnp field-matmul kernel")
@@ -326,31 +369,63 @@ class Encoder:
 
     @classmethod
     def plan(cls, spec: CodeSpec, backend: str = "simulator",
-             method: str = "auto", A: np.ndarray | None = None) -> EncodePlan:
+             method: str = "auto", A: np.ndarray | None = None, *,
+             topology: Topology | Placement | None = None,
+             link=None) -> EncodePlan:
         """Plan an encode: resolve the algorithm, build-or-reuse host tables,
         and return the cached executable plan.
 
-        backend: a registered backend name — "simulator" | "mesh" |
-                 "local" built in, plus anything added via
-                 `api.register_backend` (capability-checked here, at plan
-                 time, via `Backend.validate`)
-        method : "auto" (cost-model argmin) | "universal" | "rs" | "dft"
-        A      : explicit (K, R) generator block — required for
-                 kind="universal" specs without a seed; allowed for
-                 kind="lagrange" with arbitrary (unstructured) points, in
-                 which case only the universal schedule applies.
+        backend : a registered backend name — "simulator" | "mesh" |
+                  "local" built in, plus anything added via
+                  `api.register_backend` (capability-checked here, at plan
+                  time, via `Backend.validate`)
+        method  : "auto" (cost-model argmin) | "universal" | "rs" | "dft"
+        A       : explicit (K, R) generator block — required for
+                  kind="universal" specs without a seed; allowed for
+                  kind="lagrange" with arbitrary (unstructured) points, in
+                  which case only the universal schedule applies.
+        topology: a `repro.topo.Topology` (placed with the affinity policy
+                  when it has enough slots) or an explicit `Placement`.
+                  The simulator then reports exact per-tier C1/C2
+                  (`plan.sim_net.by_tier()`, asserted in the drift
+                  ledger); the mesh backend runs a (hosts x K/hosts)
+                  hierarchical grid when hosts divides K.
+        link    : `LinkModel` or `repro.topo.TieredLinkModel` — prices
+                  `method="auto"`; with a placement and a tiered link the
+                  argmin runs over the per-tier split.
         """
         get_backend(backend).validate(spec, op="encode")
+        placement = None
+        topo = None
+        if topology is not None:
+            if isinstance(topology, Placement):
+                placement, topo = topology, topology.topology
+            elif isinstance(topology, Topology):
+                topo = topology
+                if topology.n_slots >= topo_n_procs(spec):
+                    placement = place(spec, topology, "affinity")
+                elif get_backend(backend).measures_network:
+                    raise ValueError(
+                        f"topology has {topology.n_slots} slots < "
+                        f"{topo_n_procs(spec)} processors — pass a larger "
+                        "topology (or an explicit Placement) for the "
+                        "simulator backend")
+            else:
+                raise TypeError(
+                    f"topology must be a Topology or Placement, "
+                    f"got {type(topology).__name__}")
         digest = _digest(A)
-        plan_key = (spec, backend, method, digest)
+        plan_key = (spec, backend, method, digest, placement, topo, link)
         hit = _PLANS.get(plan_key)
         if hit is not None:
             _STATS["plan_hits"] += 1
             return hit
         _STATS["plan_misses"] += 1
         tables = _host_tables(spec, A, digest)
-        resolved, costs = _resolve_method(spec, tables.sgrs, method)
-        plan = EncodePlan(spec, backend, resolved, tables, costs)
+        resolved, costs = _resolve_method(spec, tables.sgrs, method,
+                                          placement, link)
+        plan = EncodePlan(spec, backend, resolved, tables, costs,
+                          placement=placement, topology=topo, link=link)
         _PLANS[plan_key] = plan
         return plan
 

@@ -64,9 +64,16 @@ class LinkModel:
     alpha: float = ALPHA_DEFAULT
     beta_bits: float = BETA_BITS_DEFAULT
 
+    def __post_init__(self):
+        if self.alpha < 0 or self.beta_bits < 0:
+            raise ValueError(
+                f"LinkModel needs alpha >= 0 and beta_bits >= 0, got "
+                f"alpha={self.alpha!r}, beta_bits={self.beta_bits!r}")
+
     def us(self, cost: Any) -> float:
         """Model microseconds of an analytic `LinearCost` or a measured
-        `RunStats` (anything with `.total(alpha, beta_bits)`)."""
+        `RunStats` (anything with `.total(alpha, beta_bits)` — a
+        `topo.TieredCost` collapses to its flat sum here)."""
         return cost.total(self.alpha, self.beta_bits) * 1e6
 
 
@@ -80,9 +87,22 @@ class CodedSystem:
     backend : registered backend name; capability-checked at construction
               (unsupported pairs raise `BackendCapabilityError` here, not
               mid-run)
-    method  : encode schedule ("auto" = Table-I cost-model argmin)
+    method  : encode schedule ("auto" = Table-I cost-model argmin; under a
+              topology + `TieredLinkModel` the argmin prices each method's
+              per-tier split)
     A       : explicit generator block (kind="universal"/"lagrange")
-    link    : `LinkModel` for cost reporting
+    link    : `LinkModel` (or `repro.topo.TieredLinkModel`) for cost
+              reporting and auto selection
+    topology: a `repro.topo.Topology` or explicit `Placement` — the
+              simulator then measures exact per-tier C1/C2 (surfaced in
+              `stats()["encode"]["tiers"]` and the drift ledger), and the
+              mesh backend runs the (hosts x K/hosts) hierarchical grid
+              when hosts divides K.  A bare topology must have
+              >= the spec's processor count slots on the simulator
+              backend (the mesh grid only needs the host count).
+    placement: the policy a bare `topology` is placed with — "affinity"
+              (pack each A2A group onto one host; default) or "flat"
+              (topology-oblivious round-robin)
     chunk_w : default streaming chunk width for `*_stream`/queue paths
     queue   : an externally-owned `CodingQueue` to route `submit` futures
               through instead of a lazily-opened private one.  This is the
@@ -101,13 +121,31 @@ class CodedSystem:
 
     def __init__(self, spec: CodeSpec, backend: str = "simulator", *,
                  method: str = "auto", A: np.ndarray | None = None,
-                 link: LinkModel | None = None, chunk_w: int | None = None,
+                 link: Any = None, chunk_w: int | None = None,
+                 topology: Any = None, placement: str = "affinity",
                  queue: Any = None, trace=None):
         self.spec = spec
         self.backend = backend
         self.link = link or LinkModel()
         self.chunk_w = chunk_w
         self._A = A
+        self.topology = None
+        self._placement = None
+        if topology is not None:
+            from ..topo import Placement, Topology, n_procs, place
+
+            if isinstance(topology, Placement):
+                self._placement, self.topology = topology, topology.topology
+            elif isinstance(topology, Topology):
+                self.topology = topology
+                if topology.n_slots >= n_procs(spec):
+                    self._placement = place(spec, topology, placement)
+                # else: Encoder.plan rejects it for network-measuring
+                # backends; mesh/local only need the host count
+            else:
+                raise TypeError(
+                    f"topology must be a Topology or Placement, "
+                    f"got {type(topology).__name__}")
         from ..obs import trace as _trace_mod
 
         self.tracer, self._trace_path = _trace_mod.resolve(trace)
@@ -120,8 +158,11 @@ class CodedSystem:
                 "would silently execute on the wrong backend")
         self._shared_queue = queue
         # eager plan: all capability checks + host-table builds happen now
-        self._enc: EncodePlan = Encoder.plan(spec, backend=backend,
-                                             method=method, A=A)
+        self._enc: EncodePlan = Encoder.plan(
+            spec, backend=backend, method=method, A=A,
+            topology=self._placement if self._placement is not None
+            else self.topology,
+            link=self.link if topology is not None else None)
         self._failed: set[int] = set()
         self._dplan: Any = None          # decode plan for current pattern
         self._queue: Any = None
@@ -132,6 +173,12 @@ class CodedSystem:
     def encode_plan(self) -> EncodePlan:
         """The live `EncodePlan` (the still-public planner layer)."""
         return self._enc
+
+    @property
+    def placement(self):
+        """The resolved `repro.topo.Placement` (None without a topology or
+        when the topology has fewer slots than processors)."""
+        return self._placement
 
     @property
     def decode_plan(self):
@@ -508,6 +555,17 @@ class CodedSystem:
                 "last": enc.last_stats,
             },
         }
+        tc = enc.tiered_cost()
+        if tc is not None or self._placement is not None:
+            tiers: dict = {"placement": self._placement.policy
+                           if self._placement else None}
+            if tc is not None:
+                tiers["model"] = {"intra": tc.intra, "inter": tc.inter}
+                tiers["model_us"] = self.link.us(tc)
+            net = enc.sim_net
+            if net is not None and getattr(net, "placement", None) is not None:
+                tiers["measured"] = net.by_tier()
+            out["encode"]["tiers"] = tiers
         if self.failed:
             from ..recover import UndecodableError
 
@@ -561,6 +619,14 @@ class CodedSystem:
             f"  caps    : stream={'device-pipelined' if be.supports_stream else 'per-chunk'}, "
             f"network-measuring={be.measures_network}",
         ]
+        from ..topo import TieredLinkModel
+
+        if isinstance(self.link, TieredLinkModel):
+            lines.append(
+                f"  link    : intra a={self.link.alpha_intra:g} "
+                f"b={self.link.beta_bits_intra:g} | inter "
+                f"a={self.link.alpha_inter:g} "
+                f"b={self.link.beta_bits_inter:g}")
         lines += ["  " + ln for ln in self._enc.describe().splitlines()]
         if self.failed:
             from ..recover import UndecodableError

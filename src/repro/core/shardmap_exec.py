@@ -59,7 +59,56 @@ def _group_perm(N: int, stride: int, size: int, shift: int) -> list[tuple[int, i
     return perm
 
 
+@dataclass(frozen=True)
+class TieredAxis:
+    """A (hosts x dph) hierarchical mesh axis, used AS an `axis_name`.
+
+    The mesh bodies below are written against one flat axis of K devices
+    in host-major order (device k = host k // dph, position k % dph).
+    Passing a `TieredAxis` instead of the flat axis string routes every
+    collective through `_tiered_ppermute`, which lowers each round onto
+    the tier it actually uses — a dev-axis leg (intra-host ICI), a
+    host-axis leg (inter-host DCN), or a joint permute over both axes
+    when a round genuinely mixes tiers.  The permutation applied is
+    identical either way, so outputs are bitwise-equal to the flat mesh.
+    """
+
+    hosts: int
+    dph: int
+    host_axis: str = "host"
+    dev_axis: str = "dev"
+
+    @property
+    def axes(self) -> tuple[str, str]:
+        return (self.host_axis, self.dev_axis)
+
+
+def _tiered_ppermute(x, axis: TieredAxis, perm):
+    dph = axis.dph
+    if all(s // dph == d // dph for s, d in perm):
+        # host-local round: one dev-axis ppermute, IF every host sees the
+        # same local pair set (otherwise hosts would need distinct perms)
+        by_host: dict[int, set] = {}
+        for s, d in perm:
+            by_host.setdefault(s // dph, set()).add((s % dph, d % dph))
+        legs = set(map(frozenset, by_host.values()))
+        if len(by_host) == axis.hosts and len(legs) == 1:
+            return jax.lax.ppermute(x, axis.dev_axis, sorted(legs.pop()))
+    if all(s % dph == d % dph for s, d in perm):
+        # cross-host round at fixed device position: one host-axis ppermute
+        by_pos: dict[int, set] = {}
+        for s, d in perm:
+            by_pos.setdefault(s % dph, set()).add((s // dph, d // dph))
+        legs = set(map(frozenset, by_pos.values()))
+        if len(by_pos) == dph and len(legs) == 1:
+            return jax.lax.ppermute(x, axis.host_axis, sorted(legs.pop()))
+    # mixed round: joint permute over the flattened (host, dev) index space
+    return jax.lax.ppermute(x, axis.axes, perm)
+
+
 def _ppermute(x, axis_name, perm):
+    if isinstance(axis_name, TieredAxis):
+        return _tiered_ppermute(x, axis_name, perm)
     return jax.lax.ppermute(x, axis_name, perm)
 
 

@@ -157,6 +157,11 @@ class RoundNetwork:
     `received` tracks the field elements delivered to each processor in
     fully-accounted rounds (the received-so-far state a restarted repair
     can inspect).
+    `placement` (a `repro.topo.Placement`, duck-typed to avoid the import
+    cycle core -> topo -> core) additionally attributes every accounted
+    round to a link tier: a round is "inter" if ANY of its messages
+    crosses hosts, else "intra" — so the per-tier counters sum exactly to
+    C1/C2 by construction.  `by_tier()` reads them back.
     """
 
     n_procs: int
@@ -165,6 +170,11 @@ class RoundNetwork:
     C1: int = 0
     C2: int = 0
     total_elems: int = 0
+    placement: object = None
+    c1_by_tier: dict = dc_field(default_factory=lambda: {"intra": 0,
+                                                         "inter": 0})
+    c2_by_tier: dict = dc_field(default_factory=lambda: {"intra": 0,
+                                                         "inter": 0})
     round_log: list = dc_field(default_factory=list)
     failed: set = dc_field(default_factory=set)
     received: dict = dc_field(default_factory=dict)
@@ -183,6 +193,11 @@ class RoundNetwork:
             self.tracer = get_tracer()
         elif self.tracer is False:
             self.tracer = None
+        if (self.placement is not None
+                and self.placement.n_procs < self.n_procs):
+            raise ValueError(
+                f"placement covers {self.placement.n_procs} processors, "
+                f"network has {self.n_procs}")
 
     def _check_procs(self, procs) -> set[int]:
         procs = {int(q) for q in procs}
@@ -261,6 +276,12 @@ class RoundNetwork:
         m_t = max((m.n_elems for m in msgs), default=0)
         self.C1 += 1
         self.C2 += m_t
+        if self.placement is not None:
+            host_of = self.placement.host_of
+            tier = ("inter" if any(host_of(m.src) != host_of(m.dst)
+                                   for m in msgs) else "intra")
+            self.c1_by_tier[tier] += 1
+            self.c2_by_tier[tier] += m_t
         self.total_elems += sum(m.n_elems for m in msgs)
         for m in msgs:
             self.received[m.dst] = self.received.get(m.dst, 0) + m.n_elems
@@ -328,6 +349,15 @@ class RoundNetwork:
                 # a schedule yielded an empty round (local-compute round):
                 # does not consume network time in the linear cost model
                 continue
+
+    def by_tier(self) -> dict:
+        """Measured per-tier accounting: {"intra": (C1, C2), "inter":
+        (C1, C2)} under the network's placement (empty without one).  The
+        tier entries sum exactly to the flat C1/C2."""
+        if self.placement is None:
+            return {}
+        return {t: (self.c1_by_tier[t], self.c2_by_tier[t])
+                for t in ("intra", "inter")}
 
     def cost(self, alpha: float, beta_bits: float) -> float:
         """C = alpha*C1 + (beta*ceil(log2 q))*C2 with beta_bits = beta*log2q."""

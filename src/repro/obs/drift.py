@@ -162,12 +162,35 @@ def _expected(plan, op: str, width: int) -> tuple[tuple[int, int], str]:
     return hit, f"|E|={n_erased}"
 
 
+def _expected_tiers(plan, width: int, placement):
+    """Per-tier closed form (intra C1, intra C2, inter C1, inter C2) for
+    one encode at `width` under `placement`, memoized; None when the
+    placement profile has no closed form (measured-only, not drift)."""
+    key = (plan.spec, plan.method, width, placement, "tiers")
+    hit = _EXPECTED.get(key, "unset")
+    if hit == "unset":
+        from dataclasses import replace
+
+        from ..topo import tiered_encode_cost
+
+        tc = tiered_encode_cost(replace(plan.spec, W=width), plan.method,
+                                placement, sgrs=plan.sgrs)
+        hit = None if tc is None else (tc.intra.C1, tc.intra.C2,
+                                       tc.inter.C1, tc.inter.C2)
+        if len(_EXPECTED) >= _EXPECTED_MAX:
+            _EXPECTED.clear()
+        _EXPECTED[key] = hit
+    return hit
+
+
 def record_run(plan, net, op: str, width: int) -> None:
     """Compare one simulator-backed run against the model and ledger it.
 
     Called from `PlanStats._record_net` with the run's fresh
     `RoundNetwork` (its C1/C2 are exactly this run's counts) and the
-    payload width the run actually executed."""
+    payload width the run actually executed.  Runs under a placement
+    additionally assert the per-tier split (see `repro.topo`) whenever
+    its closed form applies."""
     try:
         expected, detail = _expected(plan, op, width)
     except Exception as exc:  # noqa: BLE001 — a model we cannot evaluate
@@ -176,3 +199,17 @@ def record_run(plan, net, op: str, width: int) -> None:
         expected, detail = ("model-error", str(exc)), "model-error"
     LEDGER.record(plan.spec, plan.backend, op, detail, expected,
                   (net.C1, net.C2), width=width)
+    placement = getattr(net, "placement", None)
+    if placement is None or op != "encode":
+        return
+    try:
+        tiers = _expected_tiers(plan, width, placement)
+        tier_detail = f"{plan.method}/tiers@{placement.policy}"
+    except Exception as exc:  # noqa: BLE001 — same contract as above
+        tiers, tier_detail = ("model-error", str(exc)), "tiers/model-error"
+    if tiers is None:
+        return
+    measured = (net.c1_by_tier["intra"], net.c2_by_tier["intra"],
+                net.c1_by_tier["inter"], net.c2_by_tier["inter"])
+    LEDGER.record(plan.spec, plan.backend, op, tier_detail, tiers, measured,
+                  width=width)

@@ -1,0 +1,28 @@
+"""Shared setup for the subprocess mesh-check scripts: force N fake host
+devices BEFORE jax initializes.
+
+jax locks the platform device count at first initialization, so every
+`tests/*_mesh_checks.py` script must set XLA_FLAGS as its very first act
+— before anything imports jax.  Call `force_host_devices()` at the top of
+the script, ahead of any repro/jax import:
+
+    from _fake_devices import force_host_devices
+
+    force_host_devices(8)
+
+Raises if jax is already initialized (the flag would be silently
+ineffective — exactly the bug this helper exists to prevent).
+"""
+import os
+import sys
+
+
+def force_host_devices(n: int = 8) -> None:
+    if "jax" in sys.modules:
+        raise RuntimeError(
+            "force_host_devices() must run before jax is imported — move "
+            "the call above every repro/jax import")
+    os.environ["XLA_FLAGS"] = (
+        f"--xla_force_host_platform_device_count={n} "
+        + os.environ.get("XLA_FLAGS", "")
+    )

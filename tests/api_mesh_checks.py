@@ -10,12 +10,9 @@ reuses the compiled mesh executable.
 
 Prints 'API_MESH_CHECKS_OK' on success; any assertion failure is fatal.
 """
-import os
+from _fake_devices import force_host_devices
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=8 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+force_host_devices(8)
 
 import numpy as np
 

@@ -4,12 +4,9 @@ which must see 1 device for the smoke tests — cannot host these).
 
 Prints 'MESH_CHECKS_OK' on success; any assertion failure is fatal.
 """
-import os
+from _fake_devices import force_host_devices
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=8 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+force_host_devices(8)
 
 from functools import partial
 

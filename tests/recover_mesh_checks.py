@@ -13,10 +13,9 @@ import os
 import tempfile
 from pathlib import Path
 
-os.environ["XLA_FLAGS"] = (
-    "--xla_force_host_platform_device_count=8 "
-    + os.environ.get("XLA_FLAGS", "")
-)
+from _fake_devices import force_host_devices
+
+force_host_devices(8)
 
 import numpy as np
 

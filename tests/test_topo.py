@@ -1,0 +1,386 @@
+"""Hierarchical topology subsystem: tiered links, placement policies,
+exact per-tier accounting, topology-aware planning.
+
+The mesh-backend half (hierarchical grid bitwise == flat mesh) runs in
+the `topo_mesh_checks.py` subprocess on 8 forced host devices.
+"""
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+from conftest_hypothesis import HAVE_HYPOTHESIS, given, settings, st
+
+from repro.api import (CodedSystem, CodeSpec, Encoder, LinkModel, Placement,
+                       RunStats, TieredCost, TieredLinkModel, Topology, place,
+                       tiered_encode_cost)
+from repro.core.cost_model import LinearCost
+from repro.core.dft_a2a import dft_a2a
+from repro.core.framework import decentralized_encode
+from repro.core.simulator import RoundNetwork
+from repro.obs.drift import LEDGER
+from repro.topo import encode_groups, n_procs
+
+REPO = Path(__file__).resolve().parent.parent
+RNG = np.random.default_rng(29)
+
+SPECS = [
+    CodeSpec("universal", 4, 2, W=3, seed=5),
+    CodeSpec("rs", 4, 2, W=3),
+    CodeSpec("lagrange", 4, 2, W=3),
+    CodeSpec("dft", 4, 4, W=3),
+]
+
+
+def _run_core(spec, placement):
+    """One simulator encode of `spec` under `placement` via the core
+    schedules (bypassing the plan cache so property tests don't pollute
+    it); returns (y, net)."""
+    plan = Encoder.plan(spec, backend="simulator")  # cached tables only
+    f = spec.field
+    x = f.rand((spec.K, spec.W), np.random.default_rng(13))
+    if spec.kind == "dft":
+        net = RoundNetwork(spec.K, spec.p, placement=placement)
+        out = {}
+        net.run(dft_a2a(f, {k: x[k] for k in range(spec.K)},
+                        list(range(spec.K)), spec.p, spec.P, out))
+        return np.stack([out[k] for k in range(spec.K)]), net
+    net = RoundNetwork(spec.N, spec.p, placement=placement)
+    method = "rs" if plan.method == "rs" else "universal"
+    y, net = decentralized_encode(f, plan.A, x, p=spec.p, method=method,
+                                  sgrs=plan.sgrs, net=net)
+    return y, net
+
+
+# ---------------------------------------------------------------------------
+# model.py: Topology / TieredLinkModel / TieredCost
+# ---------------------------------------------------------------------------
+
+def test_topology_validation():
+    with pytest.raises(ValueError):
+        Topology(0, 4)
+    with pytest.raises(ValueError):
+        Topology(4, 0)
+    t = Topology(3, 4)
+    assert t.n_slots == 12
+    assert [t.host_of(s) for s in (0, 3, 4, 11)] == [0, 0, 1, 2]
+    with pytest.raises(ValueError):
+        t.host_of(12)
+
+
+def test_link_model_validation():
+    with pytest.raises(ValueError):
+        LinkModel(alpha=-1e-6)
+    with pytest.raises(ValueError):
+        LinkModel(beta_bits=-1.0)
+    for bad in ({"alpha_intra": -1.0}, {"beta_bits_intra": -1.0},
+                {"alpha_inter": -1.0}, {"beta_bits_inter": -1.0}):
+        with pytest.raises(ValueError):
+            TieredLinkModel(**bad)
+    with pytest.raises(ValueError):
+        TieredLinkModel.from_ratio(0.5)
+    lm = TieredLinkModel.from_ratio(4.0)
+    assert lm.alpha_inter == pytest.approx(4 * lm.alpha_intra)
+    assert lm.beta_bits_inter == pytest.approx(4 * lm.beta_bits_intra)
+
+
+def test_tiered_us_accepts_linear_cost_and_run_stats():
+    """Satellite: TieredLinkModel.us prices LinearCost AND RunStats like
+    the single-tier LinkModel, single-sourced through `.total` — flat
+    inputs at the (conservative) inter tier."""
+    lm = TieredLinkModel(alpha_intra=1e-6, beta_bits_intra=1e-9,
+                         alpha_inter=5e-6, beta_bits_inter=5e-9)
+    lc = LinearCost(3, 7)
+    rs = RunStats(3, 7, backend="simulator", op="encode")
+    want = lc.total(lm.alpha_inter, lm.beta_bits_inter) * 1e6
+    assert lm.us(lc) == pytest.approx(want)
+    assert lm.us(rs) == pytest.approx(want)
+    tc = TieredCost(intra=LinearCost(2, 4), inter=LinearCost(1, 3))
+    want_tc = (LinearCost(2, 4).total(lm.alpha_intra, lm.beta_bits_intra)
+               + LinearCost(1, 3).total(lm.alpha_inter, lm.beta_bits_inter)
+               ) * 1e6
+    assert lm.us(tc) == pytest.approx(want_tc)
+    # a TieredCost collapses to its flat sum under the single-tier model
+    flat = LinkModel(alpha=2e-6, beta_bits=3e-9)
+    assert flat.us(tc) == pytest.approx(flat.us(LinearCost(3, 7)))
+
+
+# ---------------------------------------------------------------------------
+# placement.py: policies
+# ---------------------------------------------------------------------------
+
+def test_placement_validation():
+    t = Topology(2, 2)
+    with pytest.raises(ValueError):
+        Placement(t, (0, 0, 1))          # duplicate slots
+    with pytest.raises(ValueError):
+        Placement(t, (0, 1, 4))          # slot out of range
+    spec = CodeSpec("rs", 16, 4)
+    with pytest.raises(ValueError):
+        place(spec, Topology(2, 2))      # 4 slots < 20 processors
+    with pytest.raises(ValueError):
+        place(spec, Topology(5, 4), "zigzag")
+
+
+def test_flat_policy_is_round_robin():
+    spec = CodeSpec("rs", 16, 4)
+    pl = place(spec, Topology(5, 4), "flat")
+    assert pl.policy == "flat"
+    assert [pl.host_of(i) for i in range(20)] == [i % 5 for i in range(20)]
+
+
+def test_affinity_packs_groups_per_host():
+    """Each phase-one A2A group (size R = 4 = devices_per_host) lands on
+    one host; the sinks get the leftover host to themselves."""
+    spec = CodeSpec("rs", 16, 4)
+    pl = place(spec, Topology(5, 4), "affinity")
+    for group in encode_groups(spec):
+        hosts = {pl.host_of(m) for m in group}
+        assert len(hosts) == 1, (group, hosts)
+    sink_hosts = {pl.host_of(16 + r) for r in range(4)}
+    assert len(sink_hosts) == 1
+    assert sink_hosts.isdisjoint({pl.host_of(k) for k in range(16)})
+
+
+def test_affinity_without_a_fitting_host_still_places_everyone():
+    # groups of 4 never fit devices_per_host=3: the leftover pass places
+    # all processors anyway (and the closed form simply may not apply)
+    spec = CodeSpec("rs", 8, 4)
+    pl = place(spec, Topology(4, 3), "affinity")
+    assert sorted(pl.slots) == sorted(range(12))
+
+
+# ---------------------------------------------------------------------------
+# exact per-tier accounting (simulator + closed form + drift ledger)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy", ["affinity", "flat"])
+@pytest.mark.parametrize("kind,K,R", [("universal", 16, 4), ("rs", 16, 4),
+                                      ("lagrange", 16, 4), ("dft", 8, 8),
+                                      ("universal", 3, 6)])
+def test_per_tier_exact_and_zero_drift(kind, K, R, policy):
+    spec = CodeSpec(kind, K, R, W=16,
+                    **({"seed": 7} if kind == "universal" else {}))
+    hosts = 5 if K >= R else 3
+    dph = -(-n_procs(spec) // hosts)
+    topo = Topology(hosts, dph)
+    plan = Encoder.plan(spec, backend="simulator", topology=place(
+        spec, topo, policy))
+    x = spec.field.rand((K, 16), RNG)
+    before = {(e.spec, e.detail): (e.exact, e.drifted)
+              for e in LEDGER.entries()}
+    y = plan.run(x)
+    flat_plan = Encoder.plan(spec, backend="simulator")
+    assert np.array_equal(y, flat_plan.run(x)), "placement changed outputs"
+    net = plan.sim_net
+    tiers = net.by_tier()
+    # tiers partition the flat totals exactly
+    assert tuple(sum(v[i] for v in tiers.values()) for i in (0, 1)) \
+        == (net.C1, net.C2)
+    tc = plan.tiered_cost()
+    if tc is not None:
+        assert tiers["intra"] == (tc.intra.C1, tc.intra.C2)
+        assert tiers["inter"] == (tc.inter.C1, tc.inter.C2)
+        detail = f"{plan.method}/tiers@{policy}"
+        cell = [e for e in LEDGER.entries()
+                if e.spec == spec and e.detail == detail]
+        assert cell and cell[0].drifted == 0
+        assert cell[0].exact > before.get((spec, detail), (0, 0))[0]
+    assert not [e for e in LEDGER.drifted() if e.spec == spec]
+
+
+def test_mixed_placement_has_no_closed_form_but_sums_hold():
+    """Swapping a sink into a source column makes a reduce row partially
+    co-hosted: the closed form declines (None) but the measured tier
+    counters still partition C1/C2."""
+    spec = CodeSpec("rs", 16, 4, W=8)
+    slots = list(range(20))
+    slots[3], slots[16] = slots[16], slots[3]
+    pl = Placement(Topology(5, 4), tuple(slots))
+    assert tiered_encode_cost(spec, "rs", pl) is None
+    y, net = _run_core(spec, pl)
+    tiers = net.by_tier()
+    assert tuple(sum(v[i] for v in tiers.values()) for i in (0, 1)) \
+        == (net.C1, net.C2)
+
+
+def test_single_host_topology_is_all_intra():
+    spec = CodeSpec("rs", 16, 4, W=4)
+    pl = place(spec, Topology(1, 20), "affinity")
+    tc = tiered_encode_cost(spec, "universal", pl)
+    assert tc.inter == LinearCost(0, 0)
+    y, net = _run_core(spec, pl)
+    assert net.by_tier()["inter"] == (0, 0)
+
+
+def test_round_network_rejects_short_placement():
+    pl = place(CodeSpec("rs", 4, 2), Topology(2, 3))
+    with pytest.raises(ValueError):
+        RoundNetwork(8, 1, placement=pl)  # 8 procs > 6 placed
+
+
+# ---------------------------------------------------------------------------
+# planner / system threading
+# ---------------------------------------------------------------------------
+
+def test_plan_cache_keyed_by_topology():
+    spec = CodeSpec("rs", 16, 4, W=8)
+    base = Encoder.plan(spec, backend="simulator")
+    topo = Topology(5, 4)
+    topod = Encoder.plan(spec, backend="simulator", topology=topo)
+    assert topod is not base
+    assert topod.topology == topo and topod.placement is not None
+    assert topod.placement.policy == "affinity"
+    assert Encoder.plan(spec, backend="simulator",
+                        topology=Topology(5, 4)) is topod
+    # an explicit placement keys separately from the bare topology
+    flat = Encoder.plan(spec, backend="simulator",
+                        topology=place(spec, topo, "flat"))
+    assert flat is not topod and flat.placement.policy == "flat"
+
+
+def test_plan_rejects_undersized_topology_on_simulator():
+    spec = CodeSpec("rs", 16, 4)
+    with pytest.raises(ValueError, match="slots"):
+        Encoder.plan(spec, backend="simulator", topology=Topology(2, 2))
+    with pytest.raises(TypeError):
+        Encoder.plan(spec, backend="simulator", topology="5x4")
+
+
+def test_auto_selection_scores_by_tiered_cost():
+    """method="auto" under a placement + TieredLinkModel must agree with
+    the explicit argmin over the per-tier split (flat-cost fallback when
+    the closed form declines)."""
+    spec = CodeSpec("rs", 16, 4, W=256)
+    pl = place(spec, Topology(5, 4), "affinity")
+    for ratio in (1.0, 4.0, 16.0):
+        link = TieredLinkModel.from_ratio(ratio)
+        plan = Encoder.plan(spec, backend="simulator", topology=pl,
+                            link=link)
+        scores = {}
+        for m in plan.costs:
+            tc = tiered_encode_cost(spec, m, pl, sgrs=plan.sgrs)
+            scores[m] = link.us(tc if tc is not None else plan.costs[m])
+        assert plan.method == min(scores, key=lambda m: (
+            scores[m], m == "universal"))
+
+
+def test_auto_selection_uses_flat_link_without_placement():
+    """A plain LinkModel (no topology) prices auto through `link.us`."""
+    spec = CodeSpec("rs", 16, 4, W=64)
+    for link in (LinkModel(alpha=1.0, beta_bits=1e-12),
+                 LinkModel(alpha=1e-12, beta_bits=1.0)):
+        plan = Encoder.plan(spec, backend="simulator", link=link)
+        want = min(plan.costs, key=lambda m: (link.us(plan.costs[m]),
+                                              m == "universal"))
+        assert plan.method == want
+
+
+def test_coded_system_tiers_in_stats_and_describe():
+    spec = CodeSpec("rs", 16, 4, W=32)
+    sys_ = CodedSystem(spec, "simulator", topology=Topology(5, 4),
+                       link=TieredLinkModel.from_ratio(4))
+    x = spec.field.rand((16, 32), RNG)
+    sys_.encode(x)
+    tiers = sys_.stats()["encode"]["tiers"]
+    assert tiers["placement"] == "affinity"
+    model = tiers["model"]
+    assert tiers["measured"] == {
+        "intra": (model["intra"].C1, model["intra"].C2),
+        "inter": (model["inter"].C1, model["inter"].C2)}
+    assert tiers["model_us"] > 0
+    d = sys_.describe()
+    assert "topo    : 5 hosts x 4 devices" in d and "tiers   :" in d
+    assert "link    : intra" in d
+
+
+def test_coded_system_rejects_undersized_topology_on_simulator():
+    with pytest.raises(ValueError):
+        CodedSystem(CodeSpec("rs", 16, 4), "simulator",
+                    topology=Topology(2, 2))
+
+
+def test_coded_system_flat_placement_policy():
+    spec = CodeSpec("rs", 16, 4, W=8)
+    sys_ = CodedSystem(spec, "simulator", topology=Topology(5, 4),
+                       placement="flat")
+    assert sys_.placement.policy == "flat"
+    x = spec.field.rand((16, 8), RNG)
+    sys_.encode(x)
+    tiers = sys_.stats()["encode"]["tiers"]
+    assert tiers["measured"]["intra"] == (0, 0)  # round-robin: all inter
+
+
+# ---------------------------------------------------------------------------
+# property test: placement invariance (satellite)
+# ---------------------------------------------------------------------------
+
+def _check_placement_invariance(spec, hosts, extra, perm):
+    """(a) outputs are bitwise-identical under ANY placement, (b) the
+    per-tier C1/C2 counters sum exactly to the flat totals, and (c) the
+    closed form — whenever it applies — matches the measured split."""
+    n = n_procs(spec)
+    topo = Topology(hosts, -(-n // hosts) + extra)
+    pl = Placement(topo, tuple(perm[:n]))
+
+    y_flat, net_flat = _run_core(spec, None)
+    y, net = _run_core(spec, pl)
+    assert np.array_equal(y, y_flat)
+    assert (net.C1, net.C2) == (net_flat.C1, net_flat.C2)
+    tiers = net.by_tier()
+    assert tuple(sum(v[i] for v in tiers.values()) for i in (0, 1)) \
+        == (net.C1, net.C2)
+    plan = Encoder.plan(spec, backend="simulator")
+    method = plan.method if spec.kind != "dft" else "dft"
+    tc = tiered_encode_cost(spec, method, pl, sgrs=plan.sgrs)
+    if tc is not None:
+        assert tiers["intra"] == (tc.intra.C1, tc.intra.C2)
+        assert tiers["inter"] == (tc.inter.C1, tc.inter.C2)
+
+
+if HAVE_HYPOTHESIS:
+    @pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.kind)
+    @given(data=st.data())
+    @settings(max_examples=20, deadline=None)
+    def test_placement_invariance(spec, data):
+        n = n_procs(spec)
+        hosts = data.draw(st.integers(min_value=1, max_value=4),
+                          label="hosts")
+        extra = data.draw(st.integers(min_value=0, max_value=3),
+                          label="extra")
+        n_slots = hosts * (-(-n // hosts) + extra)
+        perm = data.draw(st.permutations(list(range(n_slots))),
+                         label="slots")
+        _check_placement_invariance(spec, hosts, extra, perm)
+else:  # no hypothesis: a fixed-seed random sweep instead of a skip
+    @pytest.mark.parametrize("spec", SPECS, ids=lambda s: s.kind)
+    def test_placement_invariance(spec):
+        rng = np.random.default_rng(17)
+        n = n_procs(spec)
+        for _ in range(12):
+            hosts = int(rng.integers(1, 5))
+            extra = int(rng.integers(0, 4))
+            n_slots = hosts * (-(-n // hosts) + extra)
+            perm = rng.permutation(n_slots).tolist()
+            _check_placement_invariance(spec, hosts, extra, perm)
+
+
+# ---------------------------------------------------------------------------
+# mesh subprocess companion
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_hierarchical_mesh_subprocess_8_devices():
+    """Hierarchical (hosts x dph) mesh bitwise == flat mesh, all four
+    kinds, on 8 forced host devices."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = str(REPO / "src")
+    env.pop("XLA_FLAGS", None)
+    proc = subprocess.run(
+        [sys.executable, str(REPO / "tests" / "topo_mesh_checks.py")],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "TOPO_MESH_CHECKS_OK" in proc.stdout

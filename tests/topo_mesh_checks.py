@@ -1,0 +1,85 @@
+"""Hierarchical-mesh parity checks on 8 forced host devices (subprocess
+companion of test_topo.py — jax locks the device count at first init).
+
+The tentpole claim for the mesh backend: running a plan on the
+(hosts x devices_per_host) hierarchical grid — collectives decomposed
+into per-tier ppermute legs by `core.shardmap_exec.TieredAxis` — is
+bitwise-identical to the flat single-axis mesh, for all four spec kinds
+and for every grid shape whose host count divides K.  Also asserts the
+decomposition actually fires tiered legs (dev-axis/host-axis ppermutes,
+not just the joint fallback), and that hierarchical plans are cached
+separately from flat ones.
+
+Prints 'TOPO_MESH_CHECKS_OK' on success; any assertion failure is fatal.
+"""
+from _fake_devices import force_host_devices
+
+force_host_devices(8)
+
+import numpy as np  # noqa: E402
+
+from repro.api import CodeSpec, Encoder, Topology  # noqa: E402
+from repro.core import shardmap_exec as se  # noqa: E402
+
+RNG = np.random.default_rng(23)
+
+
+def check_bitwise_parity():
+    specs = [
+        CodeSpec("universal", 8, 4, W=32, seed=3),
+        CodeSpec("rs", 8, 4, W=32),
+        CodeSpec("lagrange", 8, 4, W=32),
+        CodeSpec("dft", 8, 8, W=32),
+    ]
+    for spec in specs:
+        x = spec.field.rand((spec.K, spec.W), RNG)
+        flat_plan = Encoder.plan(spec, backend="mesh")
+        flat = flat_plan.run(x)
+        sim = Encoder.plan(spec, backend="simulator").run(x)
+        assert np.array_equal(flat, sim), spec.kind
+        for hosts, dph in ((2, 4), (4, 2)):
+            plan = Encoder.plan(spec, backend="mesh",
+                                topology=Topology(hosts, dph))
+            assert plan is not flat_plan, "topology must key the plan cache"
+            y = plan.run(x)
+            assert np.array_equal(flat, y), (spec.kind, hosts, dph)
+            again = Encoder.plan(spec, backend="mesh",
+                                 topology=Topology(hosts, dph))
+            assert again is plan, "equal topologies must hit the plan cache"
+        print(f"  parity[{spec.kind}]: flat == (2x4) == (4x2) == simulator")
+
+
+def check_tiered_legs_fire():
+    """The (2 x 4) grid must lower rs rounds onto dev- AND host-axis legs
+    (phase-1 groups of 4 are host-local, the stride-4 reduce crosses
+    hosts) — not route everything through the joint fallback."""
+    counts = {"dev": 0, "host": 0, "joint": 0}
+    orig = se._tiered_ppermute
+
+    def spy(x, axis, perm):
+        dph = axis.dph
+        if all(s // dph == d // dph for s, d in perm):
+            counts["dev"] += 1
+        elif all(s % dph == d % dph for s, d in perm):
+            counts["host"] += 1
+        else:
+            counts["joint"] += 1
+        return orig(x, axis, perm)
+
+    se._tiered_ppermute = spy
+    try:
+        spec = CodeSpec("rs", 8, 4, W=8)
+        x = spec.field.rand((8, 8), RNG)
+        Encoder.plan(spec, backend="mesh",
+                     topology=Topology(2, 4)).run(x)
+    finally:
+        se._tiered_ppermute = orig
+    assert counts["dev"] > 0 and counts["host"] > 0, counts
+    assert counts["joint"] == 0, counts
+    print(f"  tiered legs fire: {counts}")
+
+
+if __name__ == "__main__":
+    check_bitwise_parity()
+    check_tiered_legs_fire()
+    print("TOPO_MESH_CHECKS_OK")
