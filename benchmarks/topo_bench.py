@@ -73,6 +73,31 @@ def rows():
            f"flat={inter_c2['flat']};affinity={inter_c2['affinity']};"
            f"backend=simulator")
 
+    # tier_commute rewrite: inter-host ROUND counts (latency, not bytes)
+    # with and without the schedule-IR pass, plus an exactness flag — the
+    # commuted program must produce bitwise-identical sink values and its
+    # attribute() split must equal the simulator's measured per-tier counts
+    pl_aff = placements["affinity"]
+    base = Encoder.plan(spec, backend="simulator", topology=pl_aff)
+    opt = Encoder.plan(spec, backend="simulator", topology=pl_aff,
+                       commute=True)
+    b_tiers = base.schedule_ir().attribute(pl_aff)
+    o_tiers = opt.schedule_ir().attribute(pl_aff)
+    x = spec.field.rand((K, W), np.random.default_rng(1))
+    same = int(np.array_equal(base.run(x), opt.run(x)))
+    measured = opt.sim_net.by_tier()
+    model = {t: (c[0], c[1] * W) for t, c in o_tiers.items()}
+    exact_commute = int(same and measured == model)
+    yield (f"topo/rounds_inter_base_K{K}_R{R},{b_tiers['inter'][0]},"
+           f"canonical inter-host rounds, affinity 5x4;"
+           f"intra={b_tiers['intra'][0]};backend=simulator")
+    yield (f"topo/rounds_inter_K{K}_R{R},{o_tiers['inter'][0]},"
+           f"tier_commute inter-host rounds, affinity 5x4;"
+           f"intra={o_tiers['intra'][0]};backend=simulator")
+    yield (f"topo/commute_exact_K{K}_R{R},{exact_commute},"
+           f"commuted outputs bitwise == canonical AND measured tiers == "
+           f"schedule_ir().attribute();backend=simulator")
+
     # ratio sweep: price each placement's best schedule, find the crossover
     crossover = 0.0
     cheaper_at_4 = 0

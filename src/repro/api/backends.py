@@ -20,9 +20,8 @@ from functools import partial
 
 import numpy as np
 
-from ..core.dft_a2a import dft_a2a
+from ..core import schedule
 from ..core.field import FERMAT_Q
-from ..core.framework import decentralized_encode
 from ..core.simulator import RoundNetwork
 from ..obs.trace import kernel_span
 from .registry import Backend, BackendCapabilityError, register_backend
@@ -30,21 +29,19 @@ from .registry import Backend, BackendCapabilityError, register_backend
 
 def run_simulator(plan, x: np.ndarray) -> tuple[np.ndarray, RoundNetwork]:
     """Execute the plan on the paper's p-port round network; returns
-    (sink values, the network with its measured C1/C2)."""
+    (sink values, the network with its measured C1/C2).
+
+    All four kinds run through one path: the plan's schedule IR
+    (`plan.schedule_ir()` — the canonical builder output, or the
+    `tier_commute`-rewritten program for `commute=True` plans) executed
+    generically by `core.schedule.execute`, which emits the exact same
+    rounds the retired per-kind generator dispatch produced."""
     spec, f = plan.spec, plan.field
     x = f.arr(x)
     pl = getattr(plan, "placement", None)
-    if spec.kind == "dft":
-        net = RoundNetwork(spec.K, spec.p, placement=pl)
-        out: dict[int, np.ndarray] = {}
-        net.run(dft_a2a(f, {k: x[k] for k in range(spec.K)},
-                        list(range(spec.K)), spec.p, spec.P, out))
-        y = np.stack([out[k] for k in range(spec.K)])
-    else:
-        method = "rs" if plan.method == "rs" else "universal"
-        net = RoundNetwork(spec.N, spec.p, placement=pl)
-        y, net = decentralized_encode(f, plan.A, x, p=spec.p, method=method,
-                                      sgrs=plan.sgrs, net=net)
+    ir = plan.schedule_ir()
+    net = RoundNetwork(ir.n_procs, spec.p, placement=pl)
+    y = schedule.execute(ir, f, x, net)
     return np.asarray(y, np.int64), net
 
 
@@ -154,6 +151,30 @@ def build_mesh_callable(plan):
         raise NotImplementedError(
             f"mesh backend covers the R | K grid (Sec. III-A); got "
             f"K={spec.K}, R={spec.R}")
+
+    if getattr(plan, "commute", False):
+        # a tier_commute-rewritten schedule no longer matches the
+        # hand-built table fast path: lower its IR generically (per-round
+        # ppermute legs + combine layers, see core.shardmap_exec)
+        from ..core.shardmap_exec import (build_ir_mesh_program,
+                                          mesh_ir_encode)
+
+        ir = plan.schedule_ir()
+        dev_of = list(range(spec.K)) + list(range(spec.R))  # sink K+r -> r
+        prog = build_ir_mesh_program(ir, dev_of)
+        arrs = prog.device_arrays()
+        keys = list(arrs)
+
+        @partial(shard_map, mesh=mesh,
+                 in_specs=(pspec,) + tuple(pspec for _ in keys),
+                 out_specs=pspec)
+        def ir_step(xb, *tb):
+            rows = {k: v[0] for k, v in zip(keys, tb)}
+            return mesh_ir_encode(xb[0], rows, prog, axis)[None]
+
+        ir_args = tuple(jnp.asarray(arrs[k]) for k in keys)
+        return jax.jit(lambda xg: ir_step(xg, *ir_args))
+
     t = plan.tables.mesh_tables(plan.method)
     arrs = t.device_arrays()
     keys = list(arrs)

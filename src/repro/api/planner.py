@@ -63,6 +63,19 @@ class HostTables:
     sgrs: StructuredGRS | None
     _mesh: dict[str, Any] = dc_field(default_factory=dict)
     _ntt: Any = "unset"                # lazy NTTEncodeParams | None
+    _ir: dict = dc_field(default_factory=dict)  # method -> RoundIR
+
+    def encode_ir(self, method: str):
+        """The canonical (placement-free) `core.schedule.RoundIR` of the
+        full framework encode for `method`, built and `validate()`d once
+        per table set — every backend lowers from this one program."""
+        if method not in self._ir:
+            from ..core.schedule import build_encode_ir
+
+            self._ir[method] = build_encode_ir(
+                self.spec, method=method, A=self.A,
+                sgrs=self.sgrs).validate()
+        return self._ir[method]
 
     def ntt_params(self):
         """NTT fast-path constants for the local backend (None when the
@@ -158,19 +171,37 @@ def method_costs(spec: CodeSpec, sgrs: StructuredGRS | None) -> dict[str, Linear
     return out
 
 
-def _resolve_method(spec: CodeSpec, sgrs: StructuredGRS | None, method: str,
+def _ir_tiered_cost(tables: "HostTables", method: str,
+                    placement: Placement) -> TieredCost | None:
+    """Per-tier cost derived from the canonical schedule IR — the fallback
+    pricing for placement profiles with no closed form (e.g. the K < R
+    broadcast phase on a host boundary)."""
+    try:
+        a = tables.encode_ir(method).attribute(placement)
+    except Exception:  # noqa: BLE001 — pricing fallback must never raise
+        return None
+    W = tables.spec.W
+    return TieredCost(LinearCost(a["intra"][0], a["intra"][1] * W),
+                      LinearCost(a["inter"][0], a["inter"][1] * W))
+
+
+def _resolve_method(spec: CodeSpec, tables: "HostTables | None", method: str,
                     placement: Placement | None = None, link=None
                     ) -> tuple[str, dict[str, LinearCost]]:
+    sgrs = tables.sgrs if tables is not None else None
     costs = method_costs(spec, sgrs)
     if method == "auto":
         # argmin of the linear cost (W already folded into each C2);
         # specific schedule wins exact ties.  Under a placement and a
         # tiered link model, each method is priced by its per-tier split
-        # (flat fallback when the closed form doesn't apply) — topology
-        # can flip the choice when one schedule keeps more traffic intra.
+        # (IR-derived when the closed form doesn't apply, flat as a last
+        # resort) — topology can flip the choice when one schedule keeps
+        # more traffic intra.
         if placement is not None and isinstance(link, TieredLinkModel):
             def _score(m: str) -> float:
                 tc = tiered_encode_cost(spec, m, placement, sgrs=sgrs)
+                if tc is None and tables is not None:
+                    tc = _ir_tiered_cost(tables, m, placement)
                 return link.us(tc if tc is not None else costs[m])
         elif link is not None:
             def _score(m: str) -> float:
@@ -216,8 +247,12 @@ class EncodePlan(PlanStats):
     placement: Placement | None = None
     topology: Topology | None = None
     link: Any = None
+    # run the tier_commute rewrite pass over the schedule IR (requires a
+    # placement; simulator backend executes the rewritten program)
+    commute: bool = False
     _mesh_fn: Callable | None = None
     _local_fn: Callable | None = None
+    _ir: Any = None                    # lazily-resolved plan-level RoundIR
     # thread-local per-run stats storage (PlanStats reads/writes this)
     _tls: Any = dc_field(default_factory=threading.local, repr=False)
 
@@ -300,17 +335,38 @@ class EncodePlan(PlanStats):
         fn = local_encode_callable(self)
         return to_device, fn, lambda y: np.asarray(y, np.int64)
 
+    def schedule_ir(self):
+        """The plan's `core.schedule.RoundIR`: the canonical per-method
+        program from the host tables, with `tier_commute(placement)`
+        applied when the plan was built with `commute=True`.  Cached for
+        the plan's lifetime (tables cache the canonical IR per method)."""
+        if self._ir is None:
+            ir = self.tables.encode_ir(self.method)
+            if self.commute and self.placement is not None:
+                ir = ir.tier_commute(self.placement)
+            self._ir = ir
+        return self._ir
+
     def cost(self) -> LinearCost:
-        """(C1, C2) of the chosen schedule per the Table-I cost model."""
+        """(C1, C2) of the chosen schedule per the Table-I cost model
+        (the canonical schedule — a commuted plan's exact counts come from
+        `schedule_ir().cost()`, see `obs.drift`)."""
         return self.costs[self.method]
 
     def tiered_cost(self) -> TieredCost | None:
         """Exact per-tier (intra, inter) split of `cost()` under the plan's
         placement; None without a placement or when the placement has no
         closed form (the simulator's measured `sim_net.by_tier()` still
-        applies)."""
+        applies).  A `commute=True` plan's split comes from its rewritten
+        schedule IR — that is the program its runs execute."""
         if self.placement is None:
             return None
+        if self.commute:
+            a = self.schedule_ir().attribute(self.placement)
+            W = self.spec.W
+            return TieredCost(
+                LinearCost(a["intra"][0], a["intra"][1] * W),
+                LinearCost(a["inter"][0], a["inter"][1] * W))
         return tiered_encode_cost(self.spec, self.method, self.placement,
                                   sgrs=self.sgrs)
 
@@ -335,6 +391,7 @@ class EncodePlan(PlanStats):
             f"  cost    : C1={c.C1} rounds, C2={c.C2} elems/port "
             f"(model C ~ {model_us:.1f} us)",
             f"  tables  : cached, key={s.table_key()}",
+            f"  schedule: {self.schedule_ir().summary(self.placement)}",
         ]
         if self.topology is not None:
             t = self.topology
@@ -371,7 +428,7 @@ class Encoder:
     def plan(cls, spec: CodeSpec, backend: str = "simulator",
              method: str = "auto", A: np.ndarray | None = None, *,
              topology: Topology | Placement | None = None,
-             link=None) -> EncodePlan:
+             link=None, commute: bool = False) -> EncodePlan:
         """Plan an encode: resolve the algorithm, build-or-reuse host tables,
         and return the cached executable plan.
 
@@ -393,6 +450,12 @@ class Encoder:
         link    : `LinkModel` or `repro.topo.TieredLinkModel` — prices
                   `method="auto"`; with a placement and a tiered link the
                   argmin runs over the per-tier split.
+        commute : apply the `RoundIR.tier_commute` rewrite pass under the
+                  resolved placement (required): the commuting reduce
+                  rounds are re-synthesized host-aware so inter-host
+                  rounds strictly shrink (or the schedule is unchanged).
+                  Simulator runs execute the rewritten program; the drift
+                  ledger checks it against `schedule_ir().cost()`.
         """
         get_backend(backend).validate(spec, op="encode")
         placement = None
@@ -414,28 +477,34 @@ class Encoder:
                 raise TypeError(
                     f"topology must be a Topology or Placement, "
                     f"got {type(topology).__name__}")
+        if commute and placement is None:
+            raise ValueError(
+                "commute=True requires a placement — pass topology= (a "
+                "Topology with enough slots, or an explicit Placement)")
         digest = _digest(A)
-        plan_key = (spec, backend, method, digest, placement, topo, link)
+        plan_key = (spec, backend, method, digest, placement, topo, link,
+                    commute)
         hit = _PLANS.get(plan_key)
         if hit is not None:
             _STATS["plan_hits"] += 1
             return hit
         _STATS["plan_misses"] += 1
         tables = _host_tables(spec, A, digest)
-        resolved, costs = _resolve_method(spec, tables.sgrs, method,
+        resolved, costs = _resolve_method(spec, tables, method,
                                           placement, link)
         plan = EncodePlan(spec, backend, resolved, tables, costs,
-                          placement=placement, topology=topo, link=link)
+                          placement=placement, topology=topo, link=link,
+                          commute=commute)
         _PLANS[plan_key] = plan
         return plan
 
     @classmethod
     def auto_method(cls, spec: CodeSpec) -> str:
         """The method `method="auto"` resolves to for this spec."""
-        sgrs = None
+        tables = None
         if spec.structured():
-            sgrs = _host_tables(spec, None, None).sgrs
-        return _resolve_method(spec, sgrs, "auto")[0]
+            tables = _host_tables(spec, None, None)
+        return _resolve_method(spec, tables, "auto")[0]
 
     @classmethod
     def cache_info(cls) -> dict[str, int]:

@@ -103,6 +103,11 @@ class CodedSystem:
     placement: the policy a bare `topology` is placed with — "affinity"
               (pack each A2A group onto one host; default) or "flat"
               (topology-oblivious round-robin)
+    commute : apply the `RoundIR.tier_commute` schedule rewrite under the
+              resolved placement (required): commuting reduce rounds are
+              re-synthesized host-aware so inter-host rounds strictly
+              shrink (or the schedule stays canonical).  See
+              `Encoder.plan(commute=...)`.
     chunk_w : default streaming chunk width for `*_stream`/queue paths
     queue   : an externally-owned `CodingQueue` to route `submit` futures
               through instead of a lazily-opened private one.  This is the
@@ -123,7 +128,7 @@ class CodedSystem:
                  method: str = "auto", A: np.ndarray | None = None,
                  link: Any = None, chunk_w: int | None = None,
                  topology: Any = None, placement: str = "affinity",
-                 queue: Any = None, trace=None):
+                 commute: bool = False, queue: Any = None, trace=None):
         self.spec = spec
         self.backend = backend
         self.link = link or LinkModel()
@@ -158,11 +163,17 @@ class CodedSystem:
                 "would silently execute on the wrong backend")
         self._shared_queue = queue
         # eager plan: all capability checks + host-table builds happen now
+        if commute and self._placement is None:
+            raise ValueError(
+                "commute=True needs a placed topology (pass a Topology "
+                "with enough slots, or an explicit Placement) — the "
+                "tier_commute rewrite is placement-aware")
         self._enc: EncodePlan = Encoder.plan(
             spec, backend=backend, method=method, A=A,
             topology=self._placement if self._placement is not None
             else self.topology,
-            link=self.link if topology is not None else None)
+            link=self.link if topology is not None else None,
+            commute=commute)
         self._failed: set[int] = set()
         self._dplan: Any = None          # decode plan for current pattern
         self._queue: Any = None

@@ -11,26 +11,40 @@ everything in this package behind one plan-then-execute call:
 host-side tables per spec, and executes on the round-network simulator, the
 shard_map/ppermute mesh, or the local Pallas/jnp kernel.
 
-Engine-level entry points (what the planner schedules; stable, and still
-the right layer for new algorithms or paper-fidelity experiments):
+The round schedule itself is a first-class IR (`schedule.RoundIR`): one
+backend-neutral program per plan, produced by per-algorithm builders
+(`build_encode_ir` / `build_decode_ir`), checked by `RoundIR.validate()`,
+attributed per network tier by `RoundIR.attribute(placement)`, rewritten
+host-aware by `RoundIR.tier_commute(placement)`, and lowered to all three
+backends (`schedule.execute` on the simulator; `shardmap_exec`'s table
+fast paths or the generic `build_ir_mesh_program` on the mesh; the local
+tables via `RoundIR.coeff_matrix()`).
+
+Engine-level entry points (stable; the builders transcribe these papers'
+schedules, and they remain the right layer for paper-fidelity
+experiments):
     Field, FERMAT               — finite fields (field.py)
     RoundNetwork, Msg           — the paper's communication model (simulator.py)
+    schedule                    — the RoundIR layer (builders/passes/lowerings)
     prepare_shoot, universal_a2a — Sec. IV universal algorithm
     dft_a2a                     — Sec. V-A permuted-DFT algorithm
     draw_loose, StructuredPoints — Sec. V-B Vandermonde algorithm
     StructuredGRS, cauchy_a2a   — Sec. VI systematic RS / Lagrange
-    decentralized_encode        — Sec. III framework (simulator backend body)
+    decentralized_encode        — Sec. III framework (retired generator
+                                  entry point; the planners now execute
+                                  `schedule` IR — this shim stays for
+                                  direct paper-fidelity use)
     nonsystematic_encode        — Appendix B
     cost_model                  — Table I analytic costs + baselines
     parity.build_encode_tables  — mesh tables for any generator block
     shardmap_exec               — shard_map bodies + host table builders
 
-Legacy direct call sites (`decentralized_encode(...)`,
-`shardmap_exec.build_*_tables(...)` at every use) are superseded by
-`Encoder.plan` — the planner is the only layer that caches tables and
-selects algorithms; prefer it in new code.
+Legacy direct call sites (`decentralized_encode(...)`, per-kind generator
+dispatch, `shardmap_exec.build_*_tables(...)` at every use) are superseded
+by `Encoder.plan` + the `schedule` IR — the planner caches tables and
+programs and selects algorithms; prefer it in new code.
 """
-from . import cost_model
+from . import cost_model, schedule
 from .cauchy import (
     StructuredGRS as StructuredGRSCode,
     cauchy_a2a,
@@ -51,6 +65,14 @@ from .matrices import (
     vandermonde,
 )
 from .prepare_shoot import cost_universal, prepare_shoot, universal_a2a
+from .schedule import (
+    RoundIR,
+    ScheduleValidationError,
+    build_decode_ir,
+    build_encode_ir,
+    build_universal_a2a_ir,
+)
+from .schedule import execute as execute_schedule
 from .simulator import (
     FailedProcessorError,
     FaultInjector,
@@ -65,6 +87,9 @@ __all__ = [
     "FERMAT", "FERMAT_Q", "Field", "FailedProcessorError", "Msg",
     "RoundNetwork", "run_lockstep",
     "FaultInjector", "PartialRunError", "PortViolationError",
+    "schedule", "RoundIR", "ScheduleValidationError",
+    "build_encode_ir", "build_decode_ir", "build_universal_a2a_ir",
+    "execute_schedule",
     "prepare_shoot", "universal_a2a", "cost_universal",
     "dft_a2a", "cost_dft", "draw_loose", "cost_draw_loose",
     "StructuredPoints", "SystematicGRS", "StructuredGRSCode",

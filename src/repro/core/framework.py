@@ -21,6 +21,12 @@ on padded square blocks (case K <= R).
 The per-block A2A is pluggable: 'universal' (prepare-and-shoot, any A) or
 'rs' (Cauchy-like two-phase draw-and-loose, Thm. 7/9 — requires a
 StructuredGRS).
+
+The planners no longer drive these generators directly: `core.schedule`'s
+builders transcribe them round-for-round into a backend-neutral `RoundIR`
+(byte-exact round structure, asserted by golden-digest tests), and all
+backends lower that IR.  `decentralized_encode` remains the
+paper-fidelity reference body and the shim for direct callers.
 """
 from __future__ import annotations
 

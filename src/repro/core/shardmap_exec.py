@@ -371,3 +371,180 @@ def mesh_draw_loose(x, t: DrawLooseTables, table_rows: dict, axis_name: str):
             v = mesh_universal_a2a(v, table_rows["coef"], table_rows["corr"],
                                    t.univ, axis_name)
     return v
+
+
+# ---------------------------------------------------------------------------
+# generic schedule-IR lowering: compile ANY `core.schedule.RoundIR` (in
+# particular a `tier_commute`-rewritten one, whose rounds no longer match
+# the hand-built table paths above) into per-device slot tables + ppermute
+# legs.  The hand-specialized mesh_* bodies above stay the fast path for
+# canonical schedules; this is the general one.
+# ---------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class IRLeg:
+    """One partial-permutation step of a round: every device sends/receives
+    at most once; messages are `width`-lane packet bundles (short bundles
+    pad with trash-slot lanes that receivers scatter back to trash)."""
+
+    perm: tuple                 # ((src_dev, dst_dev), ...)
+    gather: np.ndarray          # (n_dev, width) int32 slots to read
+    scatter: np.ndarray         # (n_dev, width) int32 slots to write
+
+
+@dataclass(frozen=True)
+class IRCombineLayer:
+    """One dependency layer of a round's combines (terms only reference
+    slots written by earlier rounds/legs/layers), as padded per-device
+    tables: out <- sum_t coeff[., t] * buf[term[., t]]."""
+
+    out_idx: np.ndarray         # (n_dev, n_comb) int32 (pad -> trash)
+    coeff: np.ndarray           # (n_dev, n_comb, n_term) uint32 (pad -> 0)
+    term: np.ndarray            # (n_dev, n_comb, n_term) int32
+
+
+@dataclass(frozen=True)
+class IRMeshProgram:
+    """A `RoundIR` compiled for devices-as-processors execution: per-device
+    packet slots (slot 0 is the trash slot all padding routes through),
+    and per round a list of ppermute legs plus combine layers."""
+
+    n_dev: int
+    n_slots: int
+    init_slot: np.ndarray       # (n_dev,) int32 slot of the local input row
+    out_slot: np.ndarray        # (n_dev,) int32 slot of the local output row
+    rounds: tuple               # ((legs, layers), ...) per IR round
+
+    def device_arrays(self) -> dict[str, np.ndarray]:
+        """All (n_dev, ...) tables keyed for sharded shard_map args."""
+        arrs = {"init": self.init_slot[:, None], "out": self.out_slot[:, None]}
+        for r, (legs, layers) in enumerate(self.rounds):
+            for i, leg in enumerate(legs):
+                arrs[f"g{r}_{i}"] = leg.gather
+                arrs[f"s{r}_{i}"] = leg.scatter
+            for i, lay in enumerate(layers):
+                arrs[f"o{r}_{i}"] = lay.out_idx
+                arrs[f"c{r}_{i}"] = lay.coeff
+                arrs[f"t{r}_{i}"] = lay.term
+        return arrs
+
+
+def build_ir_mesh_program(ir, dev_of: list[int]) -> IRMeshProgram:
+    """Compile `ir` (a `core.schedule.RoundIR`) against the processor ->
+    device overlay `dev_of` (encode: source k -> device k, sink K+r ->
+    device r, the Sec. III-A grid).  Sends between processors that share a
+    device are free (one per-device buffer); cross-device sends decompose
+    into partial-permutation legs with at most one send and one receive
+    per device; combines split into intra-round dependency layers."""
+    n_dev = max(dev_of) + 1
+    TRASH = 0
+    next_slot = [1] * n_dev                       # slot 0 = trash
+    slot_of: dict[tuple[int, int], int] = {}      # (dev, packet) -> slot
+
+    def alloc(dev: int, pid: int) -> int:
+        key = (dev, pid)
+        if key not in slot_of:
+            slot_of[key] = next_slot[dev]
+            next_slot[dev] += 1
+        return slot_of[key]
+
+    init_slot = np.zeros(n_dev, np.int32)
+    for proc, pid in ir.inputs:
+        init_slot[dev_of[proc]] = alloc(dev_of[proc], pid)
+
+    rounds = []
+    for rnd in ir.rounds:
+        # ---- sends -> partial-permutation legs --------------------------
+        cross = [s for s in rnd.sends
+                 if dev_of[s.src] != dev_of[s.dst]]
+        leg_sends: list[list] = []
+        for s in cross:
+            placed = False
+            for leg in leg_sends:
+                if all(dev_of[s.src] != dev_of[o.src]
+                       and dev_of[s.dst] != dev_of[o.dst] for o in leg):
+                    leg.append(s)
+                    placed = True
+                    break
+            if not placed:
+                leg_sends.append([s])
+        legs = []
+        for sends in leg_sends:
+            width = max(len(s.packets) for s in sends)
+            gather = np.full((n_dev, width), TRASH, np.int32)
+            scatter = np.full((n_dev, width), TRASH, np.int32)
+            perm = []
+            for s in sends:
+                sd, dd = dev_of[s.src], dev_of[s.dst]
+                perm.append((sd, dd))
+                for i, pid in enumerate(s.packets):
+                    gather[sd, i] = slot_of[(sd, pid)]
+                    scatter[dd, i] = alloc(dd, pid)
+            legs.append(IRLeg(tuple(sorted(perm)), gather, scatter))
+        for s in rnd.sends:                       # same-device: already held
+            if dev_of[s.src] == dev_of[s.dst]:
+                for pid in s.packets:
+                    slot_of[(dev_of[s.dst], pid)] = slot_of[
+                        (dev_of[s.src], pid)]
+
+        # ---- combines -> dependency layers ------------------------------
+        layer_of: dict[int, int] = {}             # out pid -> layer index
+        grouped: list[list] = []
+        for c in rnd.combines:
+            lvl = 0
+            for _, pid in c.terms:
+                if pid in layer_of:
+                    lvl = max(lvl, layer_of[pid] + 1)
+            layer_of[c.out] = lvl
+            while len(grouped) <= lvl:
+                grouped.append([])
+            grouped[lvl].append(c)
+        layers = []
+        for combs in grouped:
+            per_dev: dict[int, list] = {}
+            for c in combs:
+                per_dev.setdefault(dev_of[c.proc], []).append(c)
+            n_comb = max(len(v) for v in per_dev.values())
+            n_term = max((len(c.terms) for c in combs), default=0) or 1
+            out_idx = np.full((n_dev, n_comb), TRASH, np.int32)
+            coeff = np.zeros((n_dev, n_comb, n_term), np.uint32)
+            term = np.full((n_dev, n_comb, n_term), TRASH, np.int32)
+            for dev, cs in per_dev.items():
+                for i, c in enumerate(cs):
+                    out_idx[dev, i] = alloc(dev, c.out)
+                    for t, (cref, pid) in enumerate(c.terms):
+                        coeff[dev, i, t] = ir.coeffs[cref] % ir.q
+                        term[dev, i, t] = slot_of[(dev, pid)]
+            layers.append(IRCombineLayer(out_idx, coeff, term))
+        rounds.append((tuple(legs), tuple(layers)))
+
+    out_slot = np.zeros(n_dev, np.int32)
+    for proc, pid in ir.outputs:
+        out_slot[dev_of[proc]] = slot_of[(dev_of[proc], pid)]
+    return IRMeshProgram(n_dev, max(next_slot), init_slot, out_slot,
+                         tuple(rounds))
+
+
+def mesh_ir_encode(x, rows: dict, prog: IRMeshProgram, axis_name):
+    """shard_map body: per-device (W,) uint32 -> (W,) uint32 running the
+    compiled IR program.  `rows` carries this device's rows of
+    `prog.device_arrays()` (leading n_dev axis already sharded away)."""
+    W = x.shape[-1]
+    buf = jnp.zeros((prog.n_slots, W), jnp.uint32)
+    buf = buf.at[rows["init"][0]].set(x.astype(jnp.uint32))
+    for r, (legs, layers) in enumerate(prog.rounds):
+        for i, leg in enumerate(legs):
+            sel = buf[rows[f"g{r}_{i}"]]              # (width, W)
+            recv = _ppermute(sel, axis_name, list(leg.perm))
+            buf = buf.at[rows[f"s{r}_{i}"]].set(recv)
+            buf = buf.at[0].set(jnp.zeros((W,), jnp.uint32))  # re-arm trash
+        for i, _lay in enumerate(layers):
+            coeff = rows[f"c{r}_{i}"]                 # (n_comb, n_term)
+            vals = buf[rows[f"t{r}_{i}"]]             # (n_comb, n_term, W)
+            acc = jnp.zeros(vals.shape[:1] + vals.shape[2:], jnp.uint32)
+            for t in range(coeff.shape[1]):
+                acc = fermat_add(acc, fermat_mul(coeff[:, t, None],
+                                                 vals[:, t]))
+            buf = buf.at[rows[f"o{r}_{i}"]].set(acc)
+            buf = buf.at[0].set(jnp.zeros((W,), jnp.uint32))
+    return buf[rows["out"][0]]

@@ -135,6 +135,18 @@ def _expected(plan, op: str, width: int) -> tuple[tuple[int, int], str]:
     actual width (C2 scales linearly; C1 does not)."""
     spec = plan.spec
     if op == "encode":
+        if getattr(plan, "commute", False):
+            # a tier_commute-rewritten schedule has no Table-I closed form;
+            # its exact expectation is the rewritten IR's own accounting
+            key = (spec, plan.method, width, plan.placement, "ir")
+            hit = _EXPECTED.get(key)
+            if hit is None:
+                c1, c2 = plan.schedule_ir().cost()
+                hit = (c1, c2 * width)
+                if len(_EXPECTED) >= _EXPECTED_MAX:
+                    _EXPECTED.clear()
+                _EXPECTED[key] = hit
+            return hit, f"{plan.method}/ir"
         key = (spec, plan.method, width)
         hit = _EXPECTED.get(key)
         if hit is None:
@@ -166,17 +178,25 @@ def _expected_tiers(plan, width: int, placement):
     """Per-tier closed form (intra C1, intra C2, inter C1, inter C2) for
     one encode at `width` under `placement`, memoized; None when the
     placement profile has no closed form (measured-only, not drift)."""
-    key = (plan.spec, plan.method, width, placement, "tiers")
+    commuted = getattr(plan, "commute", False)
+    key = (plan.spec, plan.method, width, placement,
+           "ir-tiers" if commuted else "tiers")
     hit = _EXPECTED.get(key, "unset")
     if hit == "unset":
-        from dataclasses import replace
+        if commuted:
+            # per-tier expectation of the rewritten program itself
+            a = plan.schedule_ir().attribute(placement)
+            hit = (a["intra"][0], a["intra"][1] * width,
+                   a["inter"][0], a["inter"][1] * width)
+        else:
+            from dataclasses import replace
 
-        from ..topo import tiered_encode_cost
+            from ..topo import tiered_encode_cost
 
-        tc = tiered_encode_cost(replace(plan.spec, W=width), plan.method,
-                                placement, sgrs=plan.sgrs)
-        hit = None if tc is None else (tc.intra.C1, tc.intra.C2,
-                                       tc.inter.C1, tc.inter.C2)
+            tc = tiered_encode_cost(replace(plan.spec, W=width), plan.method,
+                                    placement, sgrs=plan.sgrs)
+            hit = None if tc is None else (tc.intra.C1, tc.intra.C2,
+                                           tc.inter.C1, tc.inter.C2)
         if len(_EXPECTED) >= _EXPECTED_MAX:
             _EXPECTED.clear()
         _EXPECTED[key] = hit

@@ -21,20 +21,21 @@ from functools import partial
 
 import numpy as np
 
+from ..core import schedule
 from ..core.simulator import RoundNetwork
 from ..obs.trace import kernel_span
-from .engine import decentralized_decode
 
 
 def run_simulator(plan, v: np.ndarray) -> tuple[np.ndarray, RoundNetwork]:
     """Decode on the paper's p-port round network: the erased processors
     are failed (any schedule touching them would raise); returns the
-    repaired symbols and the network with its measured C1/C2."""
+    repaired symbols and the network with its measured C1/C2.  Executes
+    the plan's decode `RoundIR` (`plan.schedule_ir()`) generically — the
+    same rounds the retired `decentralized_decode` generators produced."""
     spec, f = plan.spec, plan.field
     net = RoundNetwork(spec.N, spec.p)
     net.fail(plan.erased)
-    y, net = decentralized_decode(f, plan.tables.D, f.arr(v),
-                                  list(plan.kept), spec.p, net)
+    y = schedule.execute(plan.schedule_ir(), f, f.arr(v), net)
     return np.asarray(y, np.int64), net
 
 

@@ -32,6 +32,11 @@ failure, so nothing can be borrowed):
 Costs are closed-form (`decode_cost`, asserted against measured
 `RoundNetwork` C1/C2 in tests): per batch, Thm. 3's universal A2A cost at
 group size E' plus ceil(log_{p+1} M) reduce rounds.
+
+The simulator backend now executes this schedule as a `core.schedule`
+decode `RoundIR` (`schedule.build_decode_ir` transcribes the batched
+grid above round-for-round); `decentralized_decode` remains the
+paper-fidelity generator body and the shim for direct callers.
 """
 from __future__ import annotations
 

@@ -41,7 +41,7 @@ from ..core.cost_model import LinearCost
 from ..core.field import FERMAT_Q, Field
 from ..core.matrices import gauss_inverse
 from ..core.simulator import PartialRunError, RoundNetwork
-from .engine import batch_block, decentralized_decode, decode_batches, decode_cost
+from .engine import batch_block, decode_batches, decode_cost
 
 
 class UndecodableError(ValueError):
@@ -89,6 +89,19 @@ class DecodeTables:
     D: np.ndarray                # (K, |E|) repair matrix  S^-1 G[:, E]
     Dd: np.ndarray               # (K, K)  data matrix     S^-1
     _mesh: dict[int, Any] = dc_field(default_factory=dict)
+    _ir: Any = None              # lazy core.schedule.RoundIR
+
+    def ir(self):
+        """The decode `core.schedule.RoundIR` among the kept survivors,
+        built and `validate()`d (against the erasure set) once per table
+        set — the simulator executes exactly this program."""
+        if self._ir is None:
+            from ..core.schedule import build_decode_ir
+
+            self._ir = build_decode_ir(
+                self.spec, self.D, list(self.kept)).validate(
+                    failed=set(self.erased))
+        return self._ir
 
     def batches(self) -> list[tuple[int, int]]:
         return decode_batches(self.spec.K, len(self.erased))
@@ -308,11 +321,18 @@ class DecodePlan(PlanStats):
         c = decode_cost(self.spec.K, len(self.erased), self.spec.p)
         return LinearCost(c.C1, c.C2 * self.spec.W)
 
+    def schedule_ir(self):
+        """The decode `core.schedule.RoundIR` this plan's simulator path
+        executes (shared, via the tables, across backends/widths)."""
+        return self.tables.ir()
+
     def describe(self) -> str:
         s = self.spec
         c = self.cost()
         model_us = c.total(ALPHA_DEFAULT, BETA_BITS_DEFAULT) * 1e6
         batches = self.tables.batches()
+        sched = (self.schedule_ir().summary() if self.erased
+                 else "empty (nothing erased)")
         return "\n".join([
             f"DecodePlan[{s.kind}] K={s.K} R={s.R} p={s.p} W={s.W} q={s.q}",
             f"  backend : {self.backend}",
@@ -321,6 +341,7 @@ class DecodePlan(PlanStats):
             f"  batches : {batches} (width, padded to divisor of K)",
             f"  cost    : C1={c.C1} rounds, C2={c.C2} elems/port "
             f"(model C ~ {model_us:.1f} us)",
+            f"  schedule: {sched}",
         ])
 
 
@@ -409,8 +430,9 @@ def repair_with_faults(spec: CodeSpec, cw, erased=(), *,
         f = plan.field
         v = f.arr(v2[list(plan.kept)])
         try:
-            y, _ = decentralized_decode(f, plan.tables.D, v,
-                                        list(plan.kept), spec.p, net)
+            from ..core import schedule
+
+            y = schedule.execute(plan.schedule_ir(), f, v, net)
         except PartialRunError as exc:
             attempts.append(RepairAttempt(
                 pattern, net.C1 - c1_0, net.C2 - c2_0, completed=False,
